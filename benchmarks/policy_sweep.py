@@ -1,0 +1,79 @@
+"""Beyond-paper: head-to-head sweep of every FDN scheduling policy on the
+same mixed workload (the experiment the paper's outlook §9 calls for, with
+the FDN now actually built).
+
+Claims asserted:
+  * the SLO-composite policy meets >=99% of SLOs at LOWER energy than
+    round-robin (the FDN trade-off the paper argues for);
+  * the energy-aware policy uses less total energy than perf-ranked;
+  * perf-ranked has the lowest P90 of the static policies.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from benchmarks.fdn_common import Row, build_fdn, check
+from repro.core import (EnergyAwarePolicy, PerformanceRankedPolicy,
+                        RoundRobinCollaboration, SLOCompositePolicy,
+                        UtilizationAwarePolicy)
+from repro.core.loadgen import run_load
+
+DURATION = 90.0
+
+
+def _run(policy_name: str):
+    cp, gw, fns = build_fdn()
+    policy = {
+        "perf_ranked": lambda: PerformanceRankedPolicy(cp.perf),
+        "utilization": lambda: UtilizationAwarePolicy(cp.perf),
+        "round_robin": lambda: RoundRobinCollaboration(),
+        "energy": lambda: EnergyAwarePolicy(cp.perf),
+        "slo_composite": lambda: SLOCompositePolicy(cp.perf, cp.placement),
+    }[policy_name]()
+    cp.policy = policy
+    invs = []
+    for fn in ("nodeinfo", "primes-python", "JSON-loads",
+               "image-processing"):
+        res = run_load(cp.clock, lambda i: gw.request(i), fns[fn], vus=8,
+                       duration_s=DURATION, sleep_s=0.1,
+                       seed=hash(fn) % 1000)
+        invs += res.completed
+    met = sum(1 for i in invs
+              if i.response_time is not None
+              and i.response_time <= i.fn.slo.p90_response_s)
+    joules = sum(cp.energy.joules(p) for p in cp.platforms)
+    from repro.core.monitoring import percentile
+    p90 = percentile(sorted(i.response_time for i in invs), 0.90)
+    return {"met": met, "n": len(invs), "joules": joules, "p90": p90}
+
+
+def run_bench() -> Tuple[List[Row], List[str]]:
+    rows: List[Row] = []
+    failures: List[str] = []
+    stats = {}
+    for name in ("perf_ranked", "utilization", "round_robin", "energy",
+                 "slo_composite"):
+        s = _run(name)
+        stats[name] = s
+        rows.append(Row(f"policy_sweep/{name}", s["p90"] * 1e6,
+                        f"slo_met={s['met']}/{s['n']};"
+                        f"joules={s['joules']:.0f};p90_s={s['p90']:.3f}"))
+
+    comp = stats["slo_composite"]
+    check(comp["met"] / comp["n"] >= 0.99,
+          "composite should meet >=99% of SLOs", failures)
+    check(comp["joules"] < stats["round_robin"]["joules"],
+          "composite should use less energy than round-robin at equal "
+          "compliance", failures)
+    check(stats["energy"]["joules"] <= stats["perf_ranked"]["joules"],
+          "energy-aware should burn less than perf-ranked", failures)
+    check(stats["perf_ranked"]["p90"] <= stats["round_robin"]["p90"],
+          "perf-ranked should have lower P90 than round-robin", failures)
+    return rows, failures
+
+
+if __name__ == "__main__":
+    rows, failures = run_bench()
+    for r in rows:
+        print(r.csv())
+    print("failures:", failures or "none")

@@ -1,0 +1,151 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Roofline analysis (deliverable g): three terms per (arch x shape) on the
+single-pod mesh, derived from the compiled dry-run artifact.
+
+Methodology (see DESIGN.md §5): models scan over layers, so
+``compiled.cost_analysis()`` reports per-device FLOPs/bytes with the scan
+body counted ONCE. We therefore lower each cell at depth d1/d2 (same
+widths), fit cost(d) = base + d*per_unit, and extrapolate to the full depth.
+Collective bytes (parsed from post-SPMD HLO) get the same fit. Train cells
+are calibrated at microbatches=1 (grad-accumulation scan would otherwise be
+single-counted too; arithmetic totals are unchanged by microbatching).
+
+Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--out F]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def fit_cell(cfg, shape, mesh, d1: int = 1, d2: int = 2) -> Optional[Dict]:
+    """Two-point depth fit -> extrapolated per-device totals."""
+    from repro.launch import dryrun_lib as dl
+    units = dl.full_depth_units(cfg)
+    # Calibration lowers run fully UNROLLED (every lax.scan iteration present
+    # in HLO) so cost_analysis counts true totals; d1/d2 then isolate the
+    # per-layer cost. The full-depth dry-run keeps scans rolled.
+    c1 = dl.with_depth(cfg, d1).replace(unroll_scans=True)
+    c2 = dl.with_depth(cfg, d2).replace(unroll_scans=True)
+    r1 = dl.lower_cell(c1, shape, mesh, microbatches=1)
+    r2 = dl.lower_cell(c2, shape, mesh, microbatches=1)
+    if not (r1.ok and r2.ok):
+        return {"ok": False, "error": r1.error or r2.error}
+
+    def extrap(v1, v2):
+        per = (v2 - v1) / (d2 - d1)
+        base = v1 - d1 * per
+        return base + units * per
+
+    return {
+        "ok": True,
+        "units": units,
+        "flops_per_dev": extrap(r1.flops_per_dev, r2.flops_per_dev),
+        "bytes_per_dev": extrap(r1.bytes_per_dev, r2.bytes_per_dev),
+        "coll_bytes_per_dev": extrap(r1.coll_bytes_per_dev,
+                                     r2.coll_bytes_per_dev),
+        "coll_kinds_d2": r2.coll_detail["bytes_by_kind"],
+        "compile_s": r1.compile_s + r2.compile_s,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs: 6*N*D train, 2*N_active*D inference."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch          # decode: one token per row
+
+
+def analyse(cell_fit: Dict, cfg, shape, n_chips: int) -> Dict:
+    f = cell_fit["flops_per_dev"]
+    b = cell_fit["bytes_per_dev"]
+    c = cell_fit["coll_bytes_per_dev"]
+    t_comp = f / PEAK_FLOPS
+    t_mem = b / HBM_BW
+    t_coll = c / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(cfg, shape)
+    hlo_global = f * n_chips
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dom[0],
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # fraction of roofline: useful work per chip-second at the bound
+        "roofline_frac": (mf / n_chips / PEAK_FLOPS) / bound if bound else 0,
+    }
+
+
+def run(archs=None, shapes=None, out="results/roofline.json",
+        overrides: Optional[Dict] = None) -> Dict:
+    from repro.configs.base import ALL_SHAPES, shape_applicable
+    from repro.configs.registry import ARCH_IDS, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    n_chips = 256
+    rows = {}
+    for arch in (archs or ARCH_IDS):
+        cfg = get_config(arch)
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        for shape in (shapes or ALL_SHAPES):
+            ok, reason = shape_applicable(cfg, shape)
+            key = f"{arch}|{shape.name}"
+            if not ok:
+                rows[key] = {"ok": False, "skip": reason}
+                continue
+            fit = fit_cell(cfg, shape, mesh)
+            if not fit.get("ok"):
+                rows[key] = fit
+                print(f"FAIL {key}: {fit.get('error', '')[:160]}",
+                      flush=True)
+                continue
+            stats = analyse(fit, cfg, shape, n_chips)
+            rows[key] = {**fit, **stats}
+            print(f"{arch:22s} {shape.name:12s} "
+                  f"comp={stats['compute_s']:9.3e} "
+                  f"mem={stats['memory_s']:9.3e} "
+                  f"coll={stats['collective_s']:9.3e} "
+                  f"dom={stats['dominant']:10s} "
+                  f"useful={stats['useful_ratio']:6.3f} "
+                  f"roofline={stats['roofline_frac']:6.3f}", flush=True)
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {out}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append")
+    ap.add_argument("--shape", action="append")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args(argv)
+    shapes = None
+    if args.shape:
+        from repro.configs.registry import get_shape
+        shapes = [get_shape(s) for s in args.shape]
+    run(args.arch, shapes, args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

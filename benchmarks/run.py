@@ -1,0 +1,81 @@
+"""FDNInspector benchmark suite — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for every experiment and a
+summary of the paper-claim assertions. Roofline/dry-run results (the
+pod-scale analyses) are summarized from results/*.json when present; run
+``python -m benchmarks.roofline`` / ``python -m repro.launch.dryrun`` to
+regenerate them (they need the 512-device XLA flag set at process start,
+so they are separate entry points).
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import os
+import sys
+import time
+
+BENCHES = [
+    "fig5_platform_capability",
+    "fig6_metric_detail",
+    "fig7_function_heterogeneity",
+    "fig8_cpu_interference",
+    "fig9_memory_interference",
+    "fig10_collaboration",
+    "fig11_data_locality",
+    "table4_energy",
+    "policy_sweep",
+]
+
+
+def _summarize_json(path: str, kind: str):
+    if not os.path.exists(path):
+        print(f"# {kind}: {path} not found — run the generator first")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    if kind == "dryrun":
+        ok = sum(1 for r in data if r.get("ok"))
+        print(f"dryrun/cells_ok,{0.0:.1f},ok={ok}/{len(data)}")
+        for r in data:
+            print(f"dryrun/{r['arch']}/{r['shape']}/m{r['mesh']},"
+                  f"{r['compile_s'] * 1e6:.1f},"
+                  f"ok={int(r['ok'])};flops_dev={r['flops_per_dev']:.3e};"
+                  f"coll_dev={r['coll_bytes_per_dev']:.3e}")
+    else:
+        for key, r in data.items():
+            if not r.get("ok"):
+                continue
+            print(f"roofline/{key},{0.0:.1f},"
+                  f"comp_s={r['compute_s']:.3e};mem_s={r['memory_s']:.3e};"
+                  f"coll_s={r['collective_s']:.3e};dom={r['dominant']};"
+                  f"useful={r['useful_ratio']:.3f}")
+
+
+def main() -> int:
+    t0 = time.time()
+    all_failures = []
+    print("name,us_per_call,derived")
+    for name in BENCHES:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t = time.time()
+        rows, failures = mod.run_bench()
+        for r in rows:
+            print(r.csv())
+        status = "PASS" if not failures else "FAIL:" + "|".join(failures)
+        print(f"{name}/_claims,{(time.time() - t) * 1e6:.1f},{status}")
+        all_failures += [f"{name}: {f}" for f in failures]
+    _summarize_json("results/dryrun.json", "dryrun")
+    _summarize_json("results/roofline.json", "roofline")
+    print(f"# total wall: {time.time() - t0:.1f}s")
+    if all_failures:
+        print("# PAPER-CLAIM FAILURES:")
+        for f in all_failures:
+            print("#  -", f)
+        return 1
+    print("# all paper-claim assertions PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

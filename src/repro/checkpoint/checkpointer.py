@@ -1,0 +1,135 @@
+"""Checkpointing: atomic, manifest-driven save/restore of arbitrary pytrees
+with optional async writes and restore-time resharding — the substrate for
+the FDN's fault-tolerance story (restart on another platform/mesh).
+
+Layout:  <dir>/step_<N>/manifest.json + arrays.npz
+Atomicity: written under step_<N>.tmp then renamed; readers only ever see
+complete checkpoints. ``retain`` bounds disk usage; ``latest_step`` +
+``restore`` implement the restart path; ``restore(..., shardings=...)``
+re-device_puts onto a (possibly different) mesh, enabling elastic restarts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't resolve ml_dtypes names from strings; map them explicitly
+_EXTRA_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+                 "float8_e4m3fn": ml_dtypes.float8_e4m3fn,
+                 "float8_e5m2": ml_dtypes.float8_e5m2}
+
+
+def _resolve_dtype(name: str):
+    return _EXTRA_DTYPES.get(name, name)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, retain: int = 3,
+                 async_save: bool = False):
+        self.dir = directory
+        self.retain = retain
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        keys, vals, _ = _flatten_with_paths(tree)
+        host_vals = []
+        for v in vals:
+            a = np.asarray(v)
+            # store exotic dtypes as raw-widened floats; manifest keeps truth
+            if a.dtype == ml_dtypes.bfloat16 or a.dtype.kind == "V":
+                a = a.astype(np.float32)
+            host_vals.append(a)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, keys, host_vals, extra))
+            self._thread.start()
+        else:
+            self._write(step, keys, host_vals, extra)
+
+    def _write(self, step: int, keys: List[str], vals, extra):
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": v for i, v in enumerate(vals)})
+        manifest = {"step": step, "keys": keys,
+                    "dtypes": [str(v.dtype) for v in vals],
+                    "shapes": [list(v.shape) for v in vals],
+                    "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.retain] if self.retain else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp") and \
+                    os.path.exists(os.path.join(self.dir, name,
+                                                "manifest.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of `like`; optionally reshard."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        keys_new, vals_like, treedef = _flatten_with_paths(like)
+        by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+        out = []
+        for k, v in zip(keys_new, vals_like):
+            if k not in by_key:
+                raise KeyError(f"checkpoint missing key {k}")
+            arr = by_key[k]
+            want = getattr(v, "dtype", None)
+            if want is not None and str(want) != str(arr.dtype):
+                arr = arr.astype(_resolve_dtype(str(want)))
+            out.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree
+
+    def extra(self, step: int) -> Dict:
+        path = os.path.join(self.dir, f"step_{step}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)["extra"]

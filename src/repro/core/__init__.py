@@ -1,0 +1,49 @@
+"""Function Delivery Network (FDN) — the paper's contribution as a library.
+
+Quick start:
+
+    from repro.core import FDNControlPlane, Gateway
+    from repro.core import profiles, functions, loadgen
+
+    cp = FDNControlPlane()
+    for prof in profiles.PAPER_PLATFORMS.values():
+        cp.create_platform(prof)
+    fns = functions.paper_functions()
+    ...
+"""
+from repro.core.types import (SLO, FunctionSpec, Invocation,
+                              PlatformProfile, DeploymentSpec)
+from repro.core.simulator import SimClock
+from repro.core.control_plane import FDNControlPlane, AccessControl
+from repro.core.gateway import Gateway
+from repro.core.platform import TargetPlatform, ExecutionModel
+from repro.core.scheduler import (POLICIES, PerformanceRankedPolicy,
+                                  UtilizationAwarePolicy,
+                                  RoundRobinCollaboration,
+                                  WeightedCollaboration, DataLocalityPolicy,
+                                  EnergyAwarePolicy, SLOCompositePolicy)
+from repro.core.sidecar import SidecarController
+from repro.core.monitoring import MetricsRegistry
+from repro.core.behavioral import (P2Quantile, EWMA, EventModel,
+                                   FunctionPerformanceModel)
+from repro.core.knowledge_base import KnowledgeBase
+from repro.core.deployment import DeploymentGenerator
+from repro.core.data_placement import DataPlacementManager, ObjectStore
+from repro.core.energy import EnergyMeter
+from repro.core.faults import FailureDetector, Redeliverer, HedgePolicy
+from repro.core.recommend import Recommender
+from repro.core.tuning import ThresholdTuner, compose_functions
+
+__all__ = [
+    "SLO", "FunctionSpec", "Invocation", "PlatformProfile",
+    "DeploymentSpec", "SimClock", "FDNControlPlane", "AccessControl",
+    "Gateway", "TargetPlatform", "ExecutionModel", "POLICIES",
+    "PerformanceRankedPolicy", "UtilizationAwarePolicy",
+    "RoundRobinCollaboration", "WeightedCollaboration",
+    "DataLocalityPolicy", "EnergyAwarePolicy", "SLOCompositePolicy",
+    "SidecarController", "MetricsRegistry", "P2Quantile", "EWMA",
+    "EventModel", "FunctionPerformanceModel", "KnowledgeBase",
+    "DeploymentGenerator", "DataPlacementManager", "ObjectStore",
+    "EnergyMeter", "FailureDetector", "Redeliverer", "HedgePolicy",
+    "Recommender", "ThresholdTuner", "compose_functions",
+]

@@ -1,0 +1,184 @@
+"""FDN Control Plane (paper §3.1): the joint management layer over all
+target platforms — access control, monitoring, hierarchical scheduling,
+data placement, fault tolerance, and elastic platform membership.
+
+Flow per invocation (Fig. 3): Gateway -> access control -> Scheduler policy
+chooses the target platform -> that platform's SidecarController admits it
+locally -> completion feeds Monitoring + Behavioral models + KnowledgeBase.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.behavioral import (EventModel, FunctionPerformanceModel,
+                                   InteractionModel)
+from repro.core.data_placement import DataPlacementManager
+from repro.core.energy import EnergyMeter
+from repro.core.faults import FailureDetector, HedgePolicy, Redeliverer
+from repro.core.knowledge_base import KnowledgeBase
+from repro.core.monitoring import MetricsRegistry
+from repro.core.platform import TargetPlatform
+from repro.core.scheduler import Policy, SLOCompositePolicy
+from repro.core.sidecar import SidecarController
+from repro.core.simulator import SimClock
+from repro.core.types import DeploymentSpec, FunctionSpec, Invocation
+
+
+class AccessControl:
+    """§3.1.1 — per-platform credentials; deny unknown principals."""
+
+    def __init__(self):
+        self._tokens: Dict[str, str] = {}
+
+    def grant(self, principal: str, token: str):
+        self._tokens[principal] = token
+
+    def check(self, principal: str, token: str) -> bool:
+        return self._tokens.get(principal) == token
+
+
+class FDNControlPlane:
+    def __init__(self, clock: Optional[SimClock] = None,
+                 policy: Optional[Policy] = None,
+                 enable_hedging: bool = False,
+                 predictive_prewarm: bool = False,
+                 kb_path: Optional[str] = None):
+        self.clock = clock or SimClock()
+        self.metrics = MetricsRegistry()
+        self.energy = EnergyMeter()
+        self.placement = DataPlacementManager()
+        self.perf = FunctionPerformanceModel()
+        self.events = EventModel()
+        self.interactions = InteractionModel()
+        self.kb = KnowledgeBase(kb_path)
+        self.access = AccessControl()
+        self.platforms: Dict[str, TargetPlatform] = {}
+        self.sidecars: Dict[str, SidecarController] = {}
+        self.policy: Policy = policy or SLOCompositePolicy(
+            self.perf, self.placement)
+        self.detector = FailureDetector(self.clock)
+        self.redeliverer = Redeliverer()
+        self.hedge = HedgePolicy(self.clock, self.perf,
+                                 enabled=enable_hedging)
+        self.predictive_prewarm = predictive_prewarm
+        self.completed: List[Invocation] = []
+        self.rejected: List[Invocation] = []
+
+    # ------------------------------------------------- platform lifecycle -
+    def create_platform(self, prof, **kw) -> TargetPlatform:
+        """Factory wiring the platform to this control plane's substrate."""
+        p = TargetPlatform(prof, self.clock, self.metrics, self.energy,
+                           placement=self.placement, **kw)
+        return self.add_platform(p)
+
+    def add_platform(self, platform: TargetPlatform) -> TargetPlatform:
+        """Elastic membership: platforms may join at any time."""
+        name = platform.prof.name
+        self.platforms[name] = platform
+        self.sidecars[name] = SidecarController(platform, self.perf)
+        platform.placement = platform.placement or self.placement
+        platform.metrics = self.metrics
+        if platform.energy is not self.energy:
+            platform.energy = self.energy
+            self.energy.register(platform.prof, self.clock.now())
+        if name not in self.placement.stores:
+            self.placement.add_store(name)
+        platform.on_complete.append(self._on_complete)
+        platform.on_fail.append(self._on_fail)
+        self.detector.heartbeat(name)
+        self._schedule_heartbeat(platform)
+        return platform
+
+    def _schedule_heartbeat(self, platform: TargetPlatform):
+        """Platforms self-report liveness on the clock; a failed platform
+        stops beating and the detector ejects it (§3.1.3 Fault Tolerance)."""
+        name = platform.prof.name
+
+        def beat():
+            if self.platforms.get(name) is not platform:
+                return                      # removed (elastic scale-in)
+            if not platform.failed:
+                self.detector.heartbeat(name)
+            else:
+                self.detector.check(name)   # accrue suspicion -> eject
+            self.clock.after(self.detector.interval, beat)
+
+        self.clock.after(self.detector.interval, beat)
+
+    def remove_platform(self, name: str):
+        """Elastic scale-in (drain is the caller's concern)."""
+        self.platforms.pop(name, None)
+        self.sidecars.pop(name, None)
+
+    def alive_platforms(self) -> List[TargetPlatform]:
+        return [p for name, p in self.platforms.items()
+                if not p.failed and self.detector.check(name)]
+
+    # ----------------------------------------------------------- deploy ---
+    def deploy(self, spec: DeploymentSpec):
+        for fn in spec.functions:
+            for pname in spec.target_platforms:
+                if pname in self.platforms:
+                    self.platforms[pname].deploy(fn)
+            stage = spec.annotations.get(fn.name, {}).get("stage_objects")
+            pref = spec.annotations.get(fn.name, {}).get(
+                "preferred_platform")
+            if stage and pref:
+                self.placement.stage_for(fn.name, stage, pref)
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, inv: Invocation,
+               platform_override: Optional[str] = None) -> bool:
+        self.events.record(inv.fn.name, self.clock.now())
+        self.interactions.record(inv.fn.name, self.clock.now())
+        if self.predictive_prewarm:
+            self._maybe_prewarm(inv.fn)
+        if platform_override is not None:
+            target = self.platforms.get(platform_override)
+        else:
+            target = self.policy.choose(inv, self.alive_platforms())
+        if target is None:
+            inv.status = "failed"
+            self.rejected.append(inv)
+            return False
+        self.kb.record_decision(
+            self.clock.now(), inv.fn.name, target.prof.name,
+            self.policy.name, self.perf.predict_exec(inv.fn, target.prof))
+        self.sidecars[target.prof.name].admit(inv)
+        alternates = [p for p in self.alive_platforms() if p is not target]
+        self.hedge.watch(inv, target, alternates,
+                         lambda i, p: self.sidecars[p.prof.name].admit(i))
+        return True
+
+    # ---------------------------------------------------------- feedback --
+    def _on_complete(self, inv: Invocation):
+        self.perf.observe(inv)
+        self.hedge.completed(inv)
+        self.completed.append(inv)
+
+    def _on_fail(self, inv: Invocation):
+        self.redeliverer.handle_failure(
+            inv, lambda i: self.submit(i))
+
+    def _maybe_prewarm(self, fn: FunctionSpec):
+        """§3.3(1): start containers ahead of the forecast workload."""
+        rate = self.events.forecast_rate(fn.name)
+        if rate <= 0:
+            return
+        target = self.policy.choose(Invocation(fn, self.clock.now()),
+                                    self.alive_platforms())
+        if target is None:
+            return
+        w = self.perf.predict_exec(fn, target.prof)
+        want = int(rate * w) + 1
+        have = target.replica_count(fn.name)
+        if want > have:
+            target.prewarm(fn.name, min(want - have, 8))
+
+    # --------------------------------------------------------------- run --
+    def run_until(self, t: float):
+        self.clock.run_until(t)
+        for name, p in self.platforms.items():
+            if not p.failed:
+                self.detector.heartbeat(name)
+            p.energy.update(name, self.clock.now(), p.cpu_util())

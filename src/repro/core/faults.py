@@ -1,0 +1,127 @@
+"""Fault tolerance (paper §3.1.3 "Fault Tolerance"): failure detection,
+re-delivery to another platform, hedged requests for stragglers, and
+platform ejection / elastic re-admission.
+
+  * FailureDetector — heartbeat-based with a phi-accrual-style suspicion
+    score; platforms that miss heartbeats are ejected from scheduling.
+  * Redeliverer    — failed/lost invocations are retried on the next-best
+    platform (at-least-once delivery with bounded attempts).
+  * HedgePolicy    — straggler mitigation: if an invocation has not
+    completed within k x predicted P90, a speculative duplicate is sent to
+    the second-best platform; first completion wins.
+"""
+from __future__ import annotations
+
+import math
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+from repro.core.behavioral import FunctionPerformanceModel
+from repro.core.platform import TargetPlatform
+from repro.core.simulator import SimClock
+from repro.core.types import Invocation
+
+
+class FailureDetector:
+    """Phi-accrual-lite: suspicion grows with missed heartbeat intervals."""
+
+    def __init__(self, clock: SimClock, interval_s: float = 5.0,
+                 phi_threshold: float = 3.0):
+        self.clock = clock
+        self.interval = interval_s
+        self.phi_threshold = phi_threshold
+        self.last_beat: Dict[str, float] = {}
+        self.ejected: Dict[str, bool] = defaultdict(bool)
+        self.on_eject: List[Callable[[str], None]] = []
+        self.on_recover: List[Callable[[str], None]] = []
+
+    def heartbeat(self, platform: str):
+        self.last_beat[platform] = self.clock.now()
+        if self.ejected[platform]:
+            self.ejected[platform] = False
+            for cb in self.on_recover:
+                cb(platform)
+
+    def phi(self, platform: str) -> float:
+        last = self.last_beat.get(platform)
+        if last is None:
+            return 0.0
+        return (self.clock.now() - last) / self.interval
+
+    def check(self, platform: str) -> bool:
+        """True if the platform is considered alive."""
+        if self.phi(platform) > self.phi_threshold:
+            if not self.ejected[platform]:
+                self.ejected[platform] = True
+                for cb in self.on_eject:
+                    cb(platform)
+            return False
+        return True
+
+
+class Redeliverer:
+    """At-least-once delivery with bounded attempts across platforms."""
+
+    def __init__(self, max_attempts: int = 3):
+        self.max_attempts = max_attempts
+        self.redelivered = 0
+        self.exhausted: List[Invocation] = []
+
+    def handle_failure(self, inv: Invocation,
+                       resubmit: Callable[[Invocation], None]):
+        inv.attempts += 1
+        if inv.attempts >= self.max_attempts:
+            self.exhausted.append(inv)
+            return
+        inv.status = "pending"
+        inv.platform = None
+        inv.end_t = None
+        self.redelivered += 1
+        resubmit(inv)
+
+
+class HedgePolicy:
+    """Speculative duplicates after k x predicted P90 (straggler cut)."""
+
+    def __init__(self, clock: SimClock, perf: FunctionPerformanceModel,
+                 k: float = 2.0, enabled: bool = True):
+        self.clock = clock
+        self.perf = perf
+        self.k = k
+        self.enabled = enabled
+        self.hedges_sent = 0
+        self.hedges_won = 0
+        self._done: Dict[int, bool] = {}
+
+    def watch(self, inv: Invocation, platform: TargetPlatform,
+              alternates: List[TargetPlatform],
+              submit: Callable[[Invocation, TargetPlatform], None]):
+        if not self.enabled or not alternates:
+            return
+        # only hedge once the model has real latency observations —
+        # otherwise analytic estimates under cold starts cause hedge storms
+        key = (inv.fn.name, platform.prof.name)
+        obs = self.perf.resp_p90.get(key)
+        if obs is None or obs.count < 10:
+            return
+        budget = self.k * max(
+            self.perf.predict_p90_response(inv.fn, platform.prof), 1e-3)
+        self._done[inv.id] = False
+
+        def maybe_hedge():
+            if self._done.get(inv.id) or inv.status == "done":
+                self._done.pop(inv.id, None)
+                return
+            alt = alternates[0]
+            dup = Invocation(inv.fn, self.clock.now(), vu=inv.vu,
+                             args=inv.args)
+            dup.hedged_from = inv.id
+            self.hedges_sent += 1
+            submit(dup, alt)
+
+        self.clock.after(budget, maybe_hedge)
+
+    def completed(self, inv: Invocation):
+        if inv.hedged_from is not None:
+            self.hedges_won += 1
+        self._done[inv.id] = True

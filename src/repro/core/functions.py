@@ -1,0 +1,156 @@
+"""The paper's benchmark functions (Table 2) as real JAX workloads, plus
+ML-serving functions wrapping the model zoo.
+
+Each FaaSProfiler-derived function keeps its compute/data character:
+  nodeinfo            trivial metadata endpoint (latency-floor probe)
+  primes-python       compute-bound: count primes below 10^7 (vectorized
+                      sieve on the VPU instead of a Python loop — the TPU/
+                      JAX-native equivalent)
+  image-processing    reads an image object from the store; flip/rotate/
+                      grayscale/filter/resize in jnp
+  sentiment-analysis  tiny transformer forward (reduced qwen3) + 2-class head
+  json-loads          I/O-bound: reads a 1000x3 coordinate object, averages
+
+``real_fn`` callables actually execute (jitted) on the host CPU; the
+ExecutionModel measures them once and scales by platform speed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import FunctionSpec, SLO
+
+
+# ---------------------------------------------------------------------------
+# real JAX bodies
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _nodeinfo_body():
+    return jnp.asarray([jax.device_count(), 1, 0], jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _primes_body(n: int = 1_000_000):
+    """Vectorized sieve: mark multiples via division tests on the VPU."""
+    xs = jnp.arange(2, n, dtype=jnp.int32)
+    limit = int(np.sqrt(n)) + 1
+    divs = jnp.arange(2, limit, dtype=jnp.int32)
+    divisible = (xs[None, :] % divs[:, None]) == 0
+    not_self = xs[None, :] != divs[:, None]
+    composite = jnp.any(divisible & not_self, axis=0)
+    return jnp.sum(~composite)
+
+
+@jax.jit
+def _image_body(img: jax.Array):
+    """flip, rotate, filter(blur), grayscale, resize — paper Table 2."""
+    img = img.astype(jnp.float32)
+    flipped = img[:, ::-1]
+    rotated = jnp.rot90(flipped)
+    kernel = jnp.ones((3, 3), jnp.float32) / 9.0
+    blurred = jax.scipy.signal.convolve2d(
+        rotated.mean(-1), kernel, mode="same")
+    gray = blurred
+    small = jax.image.resize(gray, (gray.shape[0] // 2, gray.shape[1] // 2),
+                             "bilinear")
+    return jnp.mean(small)
+
+
+@jax.jit
+def _json_loads_body(coords: jax.Array):
+    return jnp.mean(coords, axis=0)
+
+
+def _sentiment_fns():
+    from repro.configs.registry import get_config
+    from repro.models import model_api as api
+    cfg = get_config("qwen3-0.6b").reduced().replace(num_layers=2)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    @jax.jit
+    def body(token_ids: jax.Array):
+        from repro.models import transformer as tfm
+        emb = jnp.take(params["embed"], token_ids[None], axis=0)
+        h, _, _ = tfm.forward_hidden(cfg, params, emb)
+        return jax.nn.softmax(h[:, -1, :2])
+
+    return body
+
+
+# ---------------------------------------------------------------------------
+# FunctionSpecs (analytic demands sized from the paper's workloads)
+# ---------------------------------------------------------------------------
+
+
+def paper_functions(image_key: str = "images/sample.jpg",
+                    json_key: str = "json/coords.json"
+                    ) -> Dict[str, FunctionSpec]:
+    sentiment = _sentiment_fns()
+    return {
+        "nodeinfo": FunctionSpec(
+            name="nodeinfo", flops=1e6, memory_mb=128, runtime="nodejs",
+            real_fn=lambda *a: _nodeinfo_body().block_until_ready(),
+            slo=SLO(2.0)),
+        "primes-python": FunctionSpec(
+            name="primes-python", flops=6e9, memory_mb=256,
+            real_fn=lambda *a: _primes_body(400_000).block_until_ready(),
+            slo=SLO(20.0)),
+        "image-processing": FunctionSpec(
+            name="image-processing", flops=2e8, read_bytes=2e6,
+            memory_mb=256, data_objects=(image_key,),
+            real_fn=lambda img=None, *a: _image_body(
+                img if img is not None
+                else jnp.ones((256, 256, 3))).block_until_ready(),
+            slo=SLO(5.0)),
+        "sentiment-analysis": FunctionSpec(
+            name="sentiment-analysis", flops=8e8, memory_mb=512,
+            real_fn=lambda *a: sentiment(
+                jnp.arange(64, dtype=jnp.int32)).block_until_ready(),
+            slo=SLO(10.0)),
+        "JSON-loads": FunctionSpec(
+            name="JSON-loads", flops=1e7, read_bytes=1e5, memory_mb=256,
+            data_objects=(json_key,),
+            real_fn=lambda coords=None, *a: _json_loads_body(
+                coords if coords is not None
+                else jnp.ones((1000, 3))).block_until_ready(),
+            slo=SLO(7.0)),
+    }
+
+
+def serving_function(arch: str, kind: str = "decode",
+                     tokens_per_req: int = 64) -> FunctionSpec:
+    """An ML-serving 'function': one batched decode/prefill call of `arch`.
+
+    FLOPs demand comes from the analytic model (2*N_active per token served
+    for decode); weights are a data object whose locality drives cold-start
+    and placement (§5.1.4 adapted to weight placement).
+    """
+    from repro.configs.registry import get_config
+    cfg = get_config(arch)
+    n_active = cfg.n_active_params()
+    flops = 2.0 * n_active * tokens_per_req
+    weight_bytes = 2.0 * cfg.n_params()
+    return FunctionSpec(
+        name=f"serve-{arch}", flops=flops, read_bytes=0.0,
+        memory_mb=int(weight_bytes / 1e6) + 256,
+        data_objects=(f"weights/{arch}",), arch=arch, kind="serve",
+        slo=SLO(p90_response_s=2.0))
+
+
+def seed_object_stores(placement, image_key="images/sample.jpg",
+                       json_key="json/coords.json", location="local"):
+    rng = np.random.default_rng(0)
+    if location not in placement.stores:
+        placement.add_store(location)
+    st = placement.stores[location]
+    st.put(image_key, 2e6, jnp.asarray(
+        rng.integers(0, 255, (256, 256, 3)), jnp.uint8))
+    st.put(json_key, 1e5, jnp.asarray(
+        rng.normal(size=(1000, 3)), jnp.float32))

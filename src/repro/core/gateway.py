@@ -1,0 +1,36 @@
+"""Gateway: the FDN's single point of entry (the NGINX analogue of
+§5.1.3), with access control and optional collaboration load-balancing in
+front of the control plane's scheduler."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.control_plane import FDNControlPlane
+from repro.core.scheduler import Policy
+from repro.core.types import Invocation
+
+
+class Gateway:
+    def __init__(self, cp: FDNControlPlane,
+                 lb_policy: Optional[Policy] = None,
+                 principal: str = "default", token: str = "secret"):
+        self.cp = cp
+        self.lb_policy = lb_policy
+        cp.access.grant(principal, token)
+        self.principal, self.token = principal, token
+        self.unauthorized = 0
+
+    def request(self, inv: Invocation, principal: Optional[str] = None,
+                token: Optional[str] = None) -> bool:
+        principal = principal if principal is not None else self.principal
+        token = token if token is not None else self.token
+        if not self.cp.access.check(principal, token):
+            self.unauthorized += 1
+            inv.status = "failed"
+            return False
+        if self.lb_policy is not None:
+            target = self.lb_policy.choose(inv, self.cp.alive_platforms())
+            if target is not None:
+                return self.cp.submit(inv,
+                                      platform_override=target.prof.name)
+        return self.cp.submit(inv)

@@ -1,0 +1,133 @@
+"""Monitoring (paper §3.1.2, Table 1): user-, platform- and infrastructure-
+centric metrics, aggregated per sampling window (default 10 s, as in the
+paper's evaluation).
+
+The registry is the FDN's Prometheus stand-in: platforms push raw samples,
+the window aggregator derives the Table-1 metric set, and the scheduler /
+behavioral models / FDNInspector benchmarks all read from here.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.types import Invocation
+
+
+def percentile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = q * (len(sorted_vals) - 1)
+    lo = int(math.floor(idx))
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = idx - lo
+    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+
+
+class WindowSeries:
+    """Per-window scalar aggregation: sum / last / values-for-percentiles."""
+
+    def __init__(self, window_s: float):
+        self.window_s = window_s
+        self.sums: Dict[int, float] = defaultdict(float)
+        self.counts: Dict[int, int] = defaultdict(int)
+        self.values: Dict[int, List[float]] = defaultdict(list)
+
+    def add(self, t: float, v: float):
+        w = int(t // self.window_s)
+        self.sums[w] += v
+        self.counts[w] += 1
+        self.values[w].append(v)
+
+    def windows(self) -> List[int]:
+        return sorted(self.sums)
+
+    def series(self, agg: str = "sum") -> List[Tuple[float, float]]:
+        out = []
+        for w in self.windows():
+            t = w * self.window_s
+            if agg == "sum":
+                out.append((t, self.sums[w]))
+            elif agg == "mean":
+                out.append((t, self.sums[w] / max(self.counts[w], 1)))
+            elif agg == "p90":
+                out.append((t, percentile(sorted(self.values[w]), 0.90)))
+            elif agg == "count":
+                out.append((t, float(self.counts[w])))
+        return out
+
+    def total(self) -> float:
+        return sum(self.sums.values())
+
+    def count(self) -> int:
+        return sum(self.counts.values())
+
+    def all_values(self) -> List[float]:
+        out: List[float] = []
+        for w in self.windows():
+            out.extend(self.values[w])
+        return out
+
+    def p90(self) -> float:
+        return percentile(sorted(self.all_values()), 0.90)
+
+
+class MetricsRegistry:
+    """Keyed by (platform, function, metric)."""
+
+    USER = ("response_time", "requests")                      # user-centric
+    PLATFORM = ("invocations", "cold_starts", "exec_time",    # platform-
+                "replicas", "memory_mb")                      # centric
+    INFRA = ("cpu_util", "mem_util", "disk_io")               # infra-centric
+
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self._m: Dict[Tuple[str, str, str], WindowSeries] = {}
+
+    def _get(self, platform: str, fn: str, metric: str) -> WindowSeries:
+        key = (platform, fn, metric)
+        if key not in self._m:
+            self._m[key] = WindowSeries(self.window_s)
+        return self._m[key]
+
+    def add(self, platform: str, fn: str, metric: str, t: float, v: float):
+        self._get(platform, fn, metric).add(t, v)
+
+    def record_completion(self, inv: Invocation, visible_infra: bool = True):
+        p, f, t = inv.platform or "?", inv.fn.name, inv.end_t or 0.0
+        self.add(p, f, "requests", t, 1.0)
+        self.add(p, f, "response_time", t, inv.response_time or 0.0)
+        self.add(p, f, "invocations", t, 1.0)
+        self.add(p, f, "exec_time", t, inv.exec_time)
+        if inv.cold_start:
+            self.add(p, f, "cold_starts", t, 1.0)
+        self.add(p, f, "memory_mb", t, float(inv.fn.memory_mb))
+        if visible_infra:
+            self.add(p, f, "disk_io", t,
+                     inv.fn.read_bytes + inv.fn.write_bytes)
+
+    def series(self, platform: str, fn: str, metric: str,
+               agg: str = "sum") -> List[Tuple[float, float]]:
+        return self._get(platform, fn, metric).series(agg)
+
+    def p90_response(self, platform: str, fn: str = "*") -> float:
+        vals: List[float] = []
+        for (p, f, m), ws in self._m.items():
+            if m != "response_time" or p != platform:
+                continue
+            if fn != "*" and f != fn:
+                continue
+            vals.extend(ws.all_values())
+        return percentile(sorted(vals), 0.90)
+
+    def total(self, platform: str, fn: str, metric: str) -> float:
+        return self._get(platform, fn, metric).total()
+
+    def requests_served(self, platform: str, fn: str = "*") -> int:
+        n = 0
+        for (p, f, m), ws in self._m.items():
+            if m == "requests" and p == platform and (fn == "*" or f == fn):
+                n += int(ws.total())
+        return n

@@ -1,0 +1,318 @@
+"""TargetPlatform: one homogeneous cluster + its FaaS platform (paper §3).
+
+Reproduces the FaaS semantics the paper measures against:
+  * replicas with cold / prewarm / warm lifecycle (OpenWhisk §6.1),
+  * reactive autoscaling + faas-idler scale-to-zero (OpenFaaS §2.2.2),
+  * GCF elastic unbounded instances w/ per-instance concurrency 1 (§2.2.3),
+  * CPU / memory interference from background load (§5.1.2, Figs. 8-9),
+  * queueing when capacity is exhausted,
+  * per-platform energy accounting (§5.2).
+
+Execution latency comes from an ExecutionModel that can either (a) use the
+analytic cost (flops / replica_flops + data-access time from the placement
+manager) or (b) really execute the function's JAX callable on the host CPU
+once, cache the measurement, and scale it by the platform/host speed ratio.
+Everything advances on the deterministic SimClock.
+"""
+from __future__ import annotations
+
+import time as wall_time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+from repro.core.data_placement import DataPlacementManager
+from repro.core.energy import EnergyMeter
+from repro.core.monitoring import MetricsRegistry
+from repro.core.simulator import SimClock
+from repro.core.types import FunctionSpec, Invocation, PlatformProfile
+
+COLD, PREWARM, WARM = "cold", "prewarm", "warm"
+
+
+class Replica:
+    __slots__ = ("state", "busy", "last_used", "fn")
+
+    def __init__(self, fn: str, state: str = COLD):
+        self.fn = fn
+        self.state = state
+        self.busy = False
+        self.last_used = 0.0
+
+
+class ExecutionModel:
+    """Latency model with optional real-measurement calibration."""
+
+    def __init__(self, host_flops: float = 2e9):
+        self.host_flops = host_flops
+        self._measured: Dict[str, float] = {}
+
+    def measure_real(self, fn: FunctionSpec, payloads) -> Optional[float]:
+        if fn.real_fn is None:
+            return None
+        if fn.name not in self._measured:
+            try:
+                fn.real_fn(*payloads)              # warmup/compile
+                t0 = wall_time.perf_counter()
+                fn.real_fn(*payloads)
+                self._measured[fn.name] = wall_time.perf_counter() - t0
+            except Exception:
+                self._measured[fn.name] = -1.0
+        m = self._measured[fn.name]
+        return None if m < 0 else m
+
+    def exec_seconds(self, fn: FunctionSpec, prof: PlatformProfile,
+                     payloads=()) -> float:
+        real = self.measure_real(fn, payloads)
+        if real is not None:
+            # scale host measurement by platform-vs-host speed ratio
+            return real * (self.host_flops / max(prof.replica_flops, 1.0))
+        return fn.flops / max(prof.replica_flops, 1.0)
+
+
+class TargetPlatform:
+    def __init__(self, prof: PlatformProfile, clock: SimClock,
+                 metrics: MetricsRegistry, energy: EnergyMeter,
+                 placement: Optional[DataPlacementManager] = None,
+                 exec_model: Optional[ExecutionModel] = None,
+                 seed: int = 0):
+        self.prof = prof
+        self.clock = clock
+        self.metrics = metrics
+        self.energy = energy
+        self.placement = placement
+        self.exec_model = exec_model or ExecutionModel()
+        self.replicas: Dict[str, List[Replica]] = defaultdict(list)
+        self.queue: deque = deque()
+        self.deployed: Dict[str, FunctionSpec] = {}
+        self.failed = False
+        self.bg_cpu = 0.0                  # §5.1.2 interference knobs
+        self.bg_mem = 0.0
+        self.on_complete: List[Callable[[Invocation], None]] = []
+        self.on_fail: List[Callable[[Invocation], None]] = []
+        self.inflight: Dict[int, Invocation] = {}
+        energy.register(prof, clock.now())
+        self._idler_scheduled = False
+
+    # ------------------------------------------------------------ deploy --
+    def deploy(self, fn: FunctionSpec):
+        """Function Deployer: registers fn; ARM platforms need ARM images."""
+        if self.prof.arm and fn.runtime == "docker-x86":
+            raise ValueError(f"{fn.name}: x86 image cannot run on ARM "
+                             f"platform {self.prof.name}")
+        self.deployed[fn.name] = fn
+        for _ in range(self.prof.prewarm_pool):
+            self.replicas[fn.name].append(Replica(fn.name, PREWARM))
+
+    def destroy(self, fn_name: str):
+        self.deployed.pop(fn_name, None)
+        self.replicas.pop(fn_name, None)
+
+    # ------------------------------------------------------- accounting ---
+    def busy_replicas(self) -> int:
+        return sum(1 for rs in self.replicas.values() for r in rs if r.busy)
+
+    def replica_count(self, fn: str) -> int:
+        return len(self.replicas[fn])
+
+    def cpu_util(self) -> float:
+        cap = max(self.prof.total_replicas, 1)
+        return min(1.0, self.bg_cpu + self.busy_replicas() / cap)
+
+    def mem_used_mb(self) -> float:
+        used = sum(len(rs) * self.deployed[f].memory_mb
+                   for f, rs in self.replicas.items() if f in self.deployed)
+        return used + self.bg_mem * self.prof.total_memory_mb
+
+    def mem_util(self) -> float:
+        return min(1.5, self.mem_used_mb() / max(self.prof.total_memory_mb,
+                                                 1))
+
+    def _touch_energy(self):
+        self.energy.update(self.prof.name, self.clock.now(), self.cpu_util())
+
+    def _sample_infra(self):
+        if not self.prof.infra_metrics_visible:
+            return
+        t = self.clock.now()
+        self.metrics.add(self.prof.name, "_infra", "cpu_util", t,
+                         self.cpu_util())
+        self.metrics.add(self.prof.name, "_infra", "mem_util", t,
+                         self.mem_util())
+
+    # ------------------------------------------------------- scheduling ---
+    def can_start_replica(self, fn: FunctionSpec) -> bool:
+        if self.prof.elastic:
+            return True
+        # Background CPU load does NOT reserve replica slots (the OS time-
+        # shares; slowdown is modeled in _interference_factor — Fig. 8).
+        if self.busy_replicas() >= self.prof.total_replicas:
+            return False
+        free_mb = self.prof.total_memory_mb - self.mem_used_mb()
+        if free_mb >= fn.memory_mb:
+            return True
+        # CPU platforms can overcommit into swap (Fig. 9's cliff applies);
+        # TPU pods (chips > 0) cannot — HBM does not swap.
+        return self.prof.chips == 0 and \
+            fn.memory_mb <= self.prof.total_memory_mb
+
+    def invoke(self, inv: Invocation):
+        """Entry point from the sidecar/control plane."""
+        if self.failed:
+            self._fail(inv, "platform down")
+            return
+        if inv.fn.name not in self.deployed:
+            self._fail(inv, "function not deployed")
+            return
+        inv.platform = self.prof.name
+        inv.scheduled_t = self.clock.now()
+        inv.status = "queued"
+        self.inflight[inv.id] = inv
+        self.queue.append(inv)
+        self._drain()
+        self._schedule_idler()
+
+    def _find_replica(self, fn: str) -> Optional[Replica]:
+        free = [r for r in self.replicas[fn] if not r.busy]
+        for state in (WARM, PREWARM, COLD):
+            for r in free:
+                if r.state == state:
+                    return r
+        return None
+
+    def _drain(self):
+        progressed = True
+        while progressed and self.queue and not self.failed:
+            progressed = False
+            inv = self.queue[0]
+            fn = self.deployed[inv.fn.name]
+            rep = self._find_replica(fn.name)
+            if rep is None and self.can_start_replica(fn):
+                rep = Replica(fn.name, COLD)
+                self.replicas[fn.name].append(rep)
+            if rep is None:
+                break
+            self.queue.popleft()
+            self._start(inv, fn, rep)
+            progressed = True
+        self._touch_energy()
+        self._sample_infra()
+
+    # -------------------------------------------------------- execution ---
+    def _interference_factor(self) -> float:
+        """CPU + memory interference (paper §5.1.2, Figs. 8-9).
+
+        CPU: background load occupies bg_cpu * cores fully; while function
+        replicas fit on the remaining free cores there is no slowdown
+        (paper: +50%% load -> no effect). Once they spill onto bg-occupied
+        cores the OS time-shares 1:1 -> ~2x (paper: +100%% load -> ~2x P90).
+
+        Memory: swap thrash is a cliff — as soon as demand exceeds physical
+        memory, latency jumps ~7x (paper: 0.8 s -> 6 s P90).
+        """
+        total = max(self.prof.total_replicas, 1)
+        free_cores = (1.0 - self.bg_cpu) * total
+        busy = self.busy_replicas()
+        factor = 1.0 if busy <= free_cores + 1e-9 else 2.0
+        pressure = self.mem_util()
+        if pressure > 1.0 + 1e-6:                   # swap cliff (Fig. 9)
+            factor *= 7.0
+        return factor
+
+    def _start(self, inv: Invocation, fn: FunctionSpec, rep: Replica):
+        now = self.clock.now()
+        startup = 0.0
+        if rep.state == COLD:
+            startup = self.prof.cold_start_s
+            inv.cold_start = True
+        elif rep.state == PREWARM:
+            startup = self.prof.cold_start_s * 0.15
+            inv.cold_start = True
+        rep.state = WARM
+        rep.busy = True
+        rep.last_used = now
+
+        data_t = 0.0
+        payloads = []
+        if self.placement is not None:
+            for obj in fn.data_objects:
+                data_t += self.placement.access_time(obj, self.prof.name)
+                self.placement.record_access(fn.name, obj)
+                payloads.append(self.placement.payload(obj))
+        exec_t = self.exec_model.exec_seconds(fn, self.prof, payloads)
+        # interference slows the whole request path (gateway/watchdog/
+        # invoker contend for the same cores and memory as the function)
+        exec_t = (exec_t + self.prof.overhead_s) * \
+            self._interference_factor()
+
+        inv.status = "running"
+        inv.start_t = now + startup
+        inv.queue_time = inv.start_t - inv.arrival_t
+        inv.exec_time = exec_t + data_t
+        inv.data_time = data_t
+        self._touch_energy()
+
+        def finish():
+            rep.busy = False
+            rep.last_used = self.clock.now()
+            if self.failed or inv.status == "failed":
+                return
+            inv.end_t = self.clock.now()
+            inv.status = "done"
+            self.inflight.pop(inv.id, None)
+            self.metrics.record_completion(
+                inv, visible_infra=self.prof.infra_metrics_visible)
+            self.metrics.add(self.prof.name, fn.name, "replicas",
+                             inv.end_t, float(self.replica_count(fn.name)))
+            for cb in self.on_complete:
+                cb(inv)
+            self._drain()
+
+        self.clock.after(startup + inv.exec_time, finish)
+
+    def _fail(self, inv: Invocation, reason: str):
+        inv.status = "failed"
+        inv.end_t = self.clock.now()
+        self.inflight.pop(inv.id, None)
+        for cb in self.on_fail:
+            cb(inv)
+
+    # ------------------------------------------------ faas-idler / warm ---
+    def _schedule_idler(self):
+        if self._idler_scheduled or self.prof.scale_to_zero_s <= 0:
+            return
+        self._idler_scheduled = True
+
+        def idle_check():
+            self._idler_scheduled = False
+            now = self.clock.now()
+            for fn, rs in list(self.replicas.items()):
+                keep = [r for r in rs
+                        if r.busy or now - r.last_used <
+                        self.prof.scale_to_zero_s or r.state == PREWARM]
+                self.replicas[fn] = keep
+            self._touch_energy()
+            if any(self.replicas.values()):
+                self._schedule_idler()
+
+        self.clock.after(self.prof.scale_to_zero_s, idle_check)
+
+    def prewarm(self, fn_name: str, n: int):
+        """Predictive prewarming from the EventModel forecast (§3.3 (1))."""
+        for _ in range(n):
+            self.replicas[fn_name].append(Replica(fn_name, PREWARM))
+
+    # ------------------------------------------------------------ faults --
+    def fail(self):
+        """Platform outage: every in-flight invocation is lost."""
+        self.failed = True
+        lost = list(self.inflight.values())
+        self.inflight.clear()
+        self.queue.clear()
+        for inv in lost:
+            self._fail(inv, "platform failure")
+        self._touch_energy()
+
+    def recover(self):
+        self.failed = False
+        for rs in self.replicas.values():
+            rs.clear()

@@ -1,0 +1,79 @@
+"""Recommendation & Visualization (paper §3.6): explains FDN runtime
+decisions to the user and recommends deployment configurations from the
+Knowledge Base + behavioral models.
+
+Everything renders to plain markdown/ASCII (the paper's Grafana dashboards,
+minus the browser)."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+from repro.core.behavioral import FunctionPerformanceModel
+from repro.core.knowledge_base import KnowledgeBase
+from repro.core.monitoring import MetricsRegistry
+from repro.core.types import FunctionSpec, PlatformProfile
+
+
+def _bar(frac: float, width: int = 30) -> str:
+    n = max(0, min(width, round(frac * width)))
+    return "#" * n + "." * (width - n)
+
+
+class Recommender:
+    def __init__(self, kb: KnowledgeBase, perf: FunctionPerformanceModel,
+                 metrics: MetricsRegistry):
+        self.kb = kb
+        self.perf = perf
+        self.metrics = metrics
+
+    # ----------------------------------------------------------- advice ---
+    def recommend(self, fn: FunctionSpec,
+                  profiles: List[PlatformProfile]) -> Dict[str, object]:
+        """Per-function advice: best platform for latency, for energy, and
+        whether the two disagree (the paper's SLO-vs-energy trade-off)."""
+        lat = {p.name: self.perf.predict_exec(fn, p) for p in profiles}
+        eng = {p.name: self.perf.predict_energy(fn, p) for p in profiles}
+        feasible = [p for p in profiles
+                    if p.total_memory_mb >= fn.memory_mb]
+        if not feasible:
+            return {"function": fn.name, "error": "fits nowhere"}
+        best_lat = min(feasible, key=lambda p: lat[p.name]).name
+        best_eng = min(feasible, key=lambda p: eng[p.name]).name
+        hist = self.kb.best_platform(fn.name)
+        return {
+            "function": fn.name,
+            "latency_best": best_lat,
+            "energy_best": best_eng,
+            "tradeoff": best_lat != best_eng,
+            "historical": hist,
+            "predicted_exec_s": {k: round(v, 4) for k, v in lat.items()},
+            "predicted_energy_j": {k: round(v, 3) for k, v in eng.items()},
+        }
+
+    # ------------------------------------------------------ explanations --
+    def explain_decisions(self, fn_name: Optional[str] = None) -> str:
+        """Markdown: where did the FDN send each function, and why."""
+        by_fn: Dict[str, Dict[str, int]] = defaultdict(
+            lambda: defaultdict(int))
+        for d in self.kb.decisions:
+            if fn_name and d["fn"] != fn_name:
+                continue
+            by_fn[d["fn"]][d["platform"]] += 1
+        lines = ["| function | platform | share |", "|---|---|---|"]
+        for fn, plats in sorted(by_fn.items()):
+            total = sum(plats.values())
+            for p, n in sorted(plats.items(), key=lambda kv: -kv[1]):
+                lines.append(f"| {fn} | {p} | {_bar(n / total, 16)} "
+                             f"{100 * n / total:.0f}% |")
+        return "\n".join(lines)
+
+    def platform_report(self, platforms: List[str]) -> str:
+        """ASCII utilization/latency overview per platform."""
+        lines = []
+        for p in platforms:
+            served = self.metrics.requests_served(p)
+            p90 = self.metrics.p90_response(p)
+            lines.append(f"{p:>22s} served={served:7d} "
+                         f"p90={p90 if p90 == p90 else 0:7.3f}s")
+        return "\n".join(lines)

@@ -1,0 +1,207 @@
+"""FDN Scheduler (paper §3.1.3): delivers each invocation to the right
+target platform. One policy class per opportunity evaluated in §5:
+
+  PerformanceRankedPolicy   §5.1.1  rank platforms by benchmarked performance
+  UtilizationAwarePolicy    §5.1.2  avoid platforms under CPU/memory pressure
+  RoundRobinCollaboration   §5.1.3  NGINX-style RR across platforms
+  WeightedCollaboration     §5.1.3  weighted (e.g. 5:1) across platforms
+  DataLocalityPolicy        §5.1.4  schedule near the function's data
+  EnergyAwarePolicy         §5.2    cheapest energy among SLO-feasible
+  SLOCompositePolicy        the full FDN decision: utilization filter ->
+                            SLO feasibility -> locality cost -> energy tie-
+                            break (hierarchical; node choice delegated to
+                            the platform's SidecarController)
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.behavioral import FunctionPerformanceModel
+from repro.core.data_placement import DataPlacementManager
+from repro.core.platform import TargetPlatform
+from repro.core.types import FunctionSpec, Invocation
+
+
+class Policy:
+    name = "base"
+
+    def choose(self, inv: Invocation,
+               platforms: Sequence[TargetPlatform]
+               ) -> Optional[TargetPlatform]:
+        raise NotImplementedError
+
+    def _alive(self, inv: Invocation, platforms) -> List[TargetPlatform]:
+        """Deployed, alive, and the function FITS (a 405B model's weights
+        cannot be delivered to a 16-chip slice — hard capability check)."""
+        return [p for p in platforms
+                if not p.failed and inv.fn.name in p.deployed
+                and p.prof.total_memory_mb >= inv.fn.memory_mb]
+
+
+class PerformanceRankedPolicy(Policy):
+    name = "perf_ranked"
+
+    def __init__(self, perf: FunctionPerformanceModel):
+        self.perf = perf
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        return min(cands,
+                   key=lambda p: self.perf.predict_exec(inv.fn, p.prof))
+
+
+class UtilizationAwarePolicy(Policy):
+    name = "utilization_aware"
+
+    def __init__(self, perf: FunctionPerformanceModel,
+                 cpu_threshold: float = 0.9, mem_threshold: float = 0.9):
+        self.perf = perf
+        self.cpu_threshold = cpu_threshold
+        self.mem_threshold = mem_threshold
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        ok = [p for p in cands
+              if p.cpu_util() < self.cpu_threshold
+              and p.mem_util() < self.mem_threshold]
+        pool = ok or cands                      # degrade gracefully
+        return min(pool,
+                   key=lambda p: self.perf.predict_exec(inv.fn, p.prof))
+
+
+class RoundRobinCollaboration(Policy):
+    name = "round_robin"
+
+    def __init__(self):
+        self._rr = itertools.count()
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        return cands[next(self._rr) % len(cands)]
+
+
+class WeightedCollaboration(Policy):
+    """Static weights (paper used old-hpc:cloud = 5:1); weights may also be
+    derived from the performance model (capacity-proportional)."""
+    name = "weighted"
+
+    def __init__(self, weights: Dict[str, int]):
+        self.weights = dict(weights)
+        self._sched: List[str] = []
+        for name, w in weights.items():
+            self._sched += [name] * max(int(w), 0)
+        self._i = 0
+
+    @classmethod
+    def from_perf(cls, fn: FunctionSpec, perf: FunctionPerformanceModel,
+                  platforms: Sequence[TargetPlatform], scale: int = 10):
+        """Capacity-proportional weights: w ~ replicas / exec_time."""
+        ws = {}
+        for p in platforms:
+            t = max(perf.predict_exec(fn, p.prof), 1e-6)
+            ws[p.prof.name] = max(1, round(
+                scale * p.prof.total_replicas / t /
+                max(sum(q.prof.total_replicas for q in platforms), 1)))
+        return cls(ws)
+
+    def choose(self, inv, platforms):
+        cands = {p.prof.name: p for p in self._alive(inv, platforms)}
+        if not cands or not self._sched:
+            return next(iter(cands.values()), None)
+        for _ in range(len(self._sched)):
+            name = self._sched[self._i % len(self._sched)]
+            self._i += 1
+            if name in cands:
+                return cands[name]
+        return next(iter(cands.values()), None)
+
+
+class DataLocalityPolicy(Policy):
+    name = "data_locality"
+
+    def __init__(self, perf: FunctionPerformanceModel,
+                 placement: DataPlacementManager):
+        self.perf = perf
+        self.placement = placement
+
+    def score(self, inv: Invocation, p: TargetPlatform) -> float:
+        data_t = sum(self.placement.access_time(o, p.prof.name)
+                     for o in inv.fn.data_objects)
+        return self.perf.predict_exec(inv.fn, p.prof) + data_t
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        return min(cands, key=lambda p: self.score(inv, p))
+
+
+class EnergyAwarePolicy(Policy):
+    """§5.2: among platforms predicted to meet the SLO, pick the one with
+    the lowest predicted energy per invocation (the 17x edge result)."""
+    name = "energy_aware"
+
+    def __init__(self, perf: FunctionPerformanceModel):
+        self.perf = perf
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        feasible = [p for p in cands
+                    if self.perf.predict_p90_response(inv.fn, p.prof)
+                    <= inv.fn.slo.p90_response_s]
+        pool = feasible or cands
+        return min(pool,
+                   key=lambda p: self.perf.predict_energy(inv.fn, p.prof))
+
+
+class SLOCompositePolicy(Policy):
+    """The FDN's production policy: hierarchical composite decision."""
+    name = "slo_composite"
+
+    def __init__(self, perf: FunctionPerformanceModel,
+                 placement: Optional[DataPlacementManager] = None,
+                 cpu_threshold: float = 0.9, mem_threshold: float = 0.95,
+                 energy_weight: float = 0.1):
+        self.perf = perf
+        self.placement = placement
+        self.cpu_threshold = cpu_threshold
+        self.mem_threshold = mem_threshold
+        self.energy_weight = energy_weight
+
+    def choose(self, inv, platforms):
+        cands = self._alive(inv, platforms)
+        if not cands:
+            return None
+        # (1) utilization filter (§5.1.2)
+        ok = [p for p in cands if p.cpu_util() < self.cpu_threshold
+              and p.mem_util() < self.mem_threshold] or cands
+        # (2) SLO feasibility (§5.1.1)
+        feasible = [p for p in ok
+                    if self.perf.predict_p90_response(inv.fn, p.prof)
+                    <= inv.fn.slo.p90_response_s] or ok
+
+        # (3) locality-adjusted latency + energy tie-break (§5.1.4, §5.2)
+        def score(p: TargetPlatform) -> float:
+            t = self.perf.predict_exec(inv.fn, p.prof)
+            if self.placement is not None:
+                t += sum(self.placement.access_time(o, p.prof.name)
+                         for o in inv.fn.data_objects)
+            e = self.perf.predict_energy(inv.fn, p.prof)
+            return t + self.energy_weight * e
+
+        return min(feasible, key=score)
+
+
+POLICIES = {cls.name: cls for cls in
+            (PerformanceRankedPolicy, UtilizationAwarePolicy,
+             RoundRobinCollaboration, WeightedCollaboration,
+             DataLocalityPolicy, EnergyAwarePolicy, SLOCompositePolicy)}

@@ -1,0 +1,55 @@
+"""Sidecar Controller (paper §3.2): the local half of the hierarchical
+scheduling decision.
+
+The control plane picks the *target platform*; the platform-local sidecar
+(a) picks the node/replica (least-loaded first), and (b) for locally
+triggered invocations decides whether to run locally or delegate up to the
+control plane (when the local platform is under pressure or predicted to
+violate the SLO).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.behavioral import FunctionPerformanceModel
+from repro.core.platform import TargetPlatform
+from repro.core.types import Invocation
+
+
+class SidecarController:
+    def __init__(self, platform: TargetPlatform,
+                 perf: Optional[FunctionPerformanceModel] = None,
+                 cpu_threshold: float = 0.95):
+        self.platform = platform
+        self.perf = perf
+        self.cpu_threshold = cpu_threshold
+        self.delegated = 0
+        self.local = 0
+
+    # node selection inside the platform --------------------------------
+    def admit(self, inv: Invocation):
+        """Control-plane-routed invocation: place onto this platform.
+
+        Node choice is folded into the platform's replica picker (warm
+        replicas first == least cold-start node); the sidecar records the
+        decision for the knowledge base.
+        """
+        self.platform.invoke(inv)
+
+    # local trigger path -------------------------------------------------
+    def handle_local_trigger(self, inv: Invocation,
+                             delegate: Callable[[Invocation], None]):
+        """§3.2: run locally unless pressure/SLO says delegate upward."""
+        p = self.platform
+        pressured = (p.failed or p.cpu_util() >= self.cpu_threshold
+                     or p.mem_util() >= 1.0)
+        slo_risk = False
+        if self.perf is not None and not pressured:
+            slo_risk = (self.perf.predict_p90_response(inv.fn, p.prof)
+                        > inv.fn.slo.p90_response_s)
+        if pressured or slo_risk or inv.fn.name not in p.deployed:
+            self.delegated += 1
+            delegate(inv)
+        else:
+            self.local += 1
+            p.invoke(inv)

@@ -1,0 +1,50 @@
+"""Deterministic discrete-event clock.
+
+One CPU core has to impersonate five target platforms, so every latency in
+the FDN (queueing, cold starts, execution, data transfer) is advanced on
+this clock. Small functions can still *really* execute (jitted on CPU) to
+calibrate the analytic costs — see platform.ExecutionModel.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class SimClock:
+    def __init__(self):
+        self._t = 0.0
+        self._q: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def now(self) -> float:
+        return self._t
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        assert t >= self._t - 1e-9, (t, self._t)
+        heapq.heappush(self._q, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.schedule(self._t + max(dt, 0.0), fn)
+
+    def step(self) -> bool:
+        if not self._q:
+            return False
+        t, _, fn = heapq.heappop(self._q)
+        self._t = max(self._t, t)
+        fn()
+        return True
+
+    def run_until(self, t_end: float) -> None:
+        while self._q and self._q[0][0] <= t_end:
+            self.step()
+        self._t = max(self._t, t_end)
+
+    def run(self) -> None:
+        while self.step():
+            pass
+
+    @property
+    def pending(self) -> int:
+        return len(self._q)

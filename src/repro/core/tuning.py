@@ -1,0 +1,95 @@
+"""External components (paper §3.6): Threshold Tuning and the function-
+composition optimizer (§6.3).
+
+ThresholdTuner replays historic load (via a caller-supplied evaluation
+closure, usually an FDNInspector run on the sim clock) across a grid of
+scheduler thresholds and returns the SLO-best setting — offline tuning of
+the FDN from Knowledge-Base history, exactly the role the paper assigns to
+this component.
+
+compose_functions folds producer->consumer chains (detected by the
+InteractionModel) into a single composed function, removing the
+inter-function transition (the "double spending" cost of §6.3).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.behavioral import InteractionModel
+from repro.core.types import FunctionSpec, SLO
+
+
+@dataclass
+class TuningResult:
+    best: Dict[str, float]
+    score: float
+    trials: List[Tuple[Dict[str, float], float]]
+
+
+class ThresholdTuner:
+    """Grid-search scheduler thresholds against a replayable evaluation.
+
+    ``evaluate(thresholds) -> score`` should run a (simulated) workload
+    with an SLOCompositePolicy configured from `thresholds` and return a
+    quality score (higher better), e.g. fraction of SLO-met requests minus
+    an energy penalty.
+    """
+
+    def __init__(self, grid: Optional[Dict[str, Sequence[float]]] = None):
+        self.grid = grid or {
+            "cpu_threshold": (0.7, 0.8, 0.9, 0.95),
+            "mem_threshold": (0.8, 0.9, 0.95),
+            "energy_weight": (0.0, 0.1, 0.5),
+        }
+
+    def tune(self, evaluate: Callable[[Dict[str, float]], float]
+             ) -> TuningResult:
+        keys = sorted(self.grid)
+        trials: List[Tuple[Dict[str, float], float]] = []
+        best, best_score = None, float("-inf")
+        for combo in itertools.product(*(self.grid[k] for k in keys)):
+            thresholds = dict(zip(keys, combo))
+            score = evaluate(thresholds)
+            trials.append((thresholds, score))
+            if score > best_score:
+                best, best_score = thresholds, score
+        return TuningResult(best or {}, best_score, trials)
+
+
+def compose_functions(a: FunctionSpec, b: FunctionSpec,
+                      transition_overhead_s: float = 0.0) -> FunctionSpec:
+    """Compose a->b into one function (paper §6.3).
+
+    The composed function's demands are the sums; intermediate-result I/O
+    between members disappears (b's reads of a's writes become in-memory),
+    and the platform charges one invocation instead of two — the paper's
+    cost argument for composition.
+    """
+    internal = min(a.write_bytes, b.read_bytes)
+    real_fn = None
+    if a.real_fn is not None and b.real_fn is not None:
+        def real_fn(*args, _a=a.real_fn, _b=b.real_fn):
+            return _b(_a(*args))
+    return FunctionSpec(
+        name=f"{a.name}+{b.name}",
+        flops=a.flops + b.flops,
+        read_bytes=a.read_bytes + max(b.read_bytes - internal, 0.0),
+        write_bytes=max(a.write_bytes - internal, 0.0) + b.write_bytes,
+        memory_mb=max(a.memory_mb, b.memory_mb),
+        runtime=a.runtime,
+        data_objects=tuple(dict.fromkeys(a.data_objects + b.data_objects)),
+        real_fn=real_fn,
+        slo=SLO(min(a.slo.p90_response_s, b.slo.p90_response_s)),
+    )
+
+
+def composition_plan(im: InteractionModel, fns: Dict[str, FunctionSpec],
+                     min_count: int = 10) -> List[FunctionSpec]:
+    """Fold every hot producer->consumer edge into a composed function."""
+    out = []
+    for src, dst in im.compose_candidates(min_count):
+        if src in fns and dst in fns:
+            out.append(compose_functions(fns[src], fns[dst]))
+    return out

@@ -1,0 +1,47 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU (`interpret=False`) these are the perf-critical paths; on this CPU
+container every kernel runs in interpret mode and is validated against the
+pure-jnp oracles in ref.py (tests/test_kernels.py sweeps shapes/dtypes).
+
+``use_kernels(cfg)`` — models route through these when cfg.use_pallas.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_block: int = 128, kv_block: int = 128) -> jax.Array:
+    return _flash(q, k, v, causal=causal, window=window, q_block=q_block,
+                  kv_block=kv_block, interpret=not on_tpu())
+
+
+def decode_attention(q, k, v, lengths, *, splits: int = 4,
+                     kv_block: int = 128) -> jax.Array:
+    return _decode(q, k, v, lengths, splits=splits, kv_block=kv_block,
+                   interpret=not on_tpu())
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64
+             ) -> Tuple[jax.Array, jax.Array]:
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=not on_tpu())
+
+
+def rglru_scan(a, b, *, chunk: int = 64,
+               width_block: int = 128) -> jax.Array:
+    return _rglru(a, b, chunk=chunk, width_block=width_block,
+                  interpret=not on_tpu())

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are deliberately naive (full materialization, f32) — correctness
+references, not performance paths.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,T,KH,D) -> (B,Sq,H,D). GQA by head grouping."""
+    b, sq, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, sq, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qr,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    ok = jnp.ones((sq, t), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B,H,D); k,v: (B,T,KH,D); lengths: (B,) valid prefix lengths."""
+    b, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qr,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    mask = jnp.arange(t)[None, :] < lengths[:, None]          # (B,T)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, h0: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,)<0; Bm/Cm: (B,S,G,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hpg = h // g
+    xf = x.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), hpg, axis=2)   # (B,S,H,N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), hpg, axis=2)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                              # (B,H,*)
+        decay = jnp.exp(dtt * A[None, :])                  # (B,H)
+        state = state * decay[..., None, None] + \
+            (dtt[..., None] * xt)[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((b, h, p, n), jnp.float32))
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3), final
+
+
+def rglru_ref(a: jax.Array, b: jax.Array,
+              h0: Optional[jax.Array] = None) -> jax.Array:
+    """Sequential linear recurrence h_t = a_t*h_{t-1} + b_t. a,b: (B,S,W)."""
+    bs, s, w = a.shape
+    init = (h0.astype(jnp.float32) if h0 is not None
+            else jnp.zeros((bs, w), jnp.float32))
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, init,
+                         (a.astype(jnp.float32).transpose(1, 0, 2),
+                          b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

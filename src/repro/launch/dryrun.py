@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input-shape)
+cell on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+
+The very first two lines of this file force 512 host placeholder devices —
+before ANY other import — because jax locks the device count on first use.
+"""
+import argparse
+import json
+import sys
+
+from repro.configs.base import ALL_SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun_lib import lower_cell
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    choices=ARCH_IDS, help="architecture id(s); default all")
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = args.arch or ARCH_IDS
+    shapes = ([get_shape(s) for s in args.shape] if args.shape
+              else list(ALL_SHAPES))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                ok, reason = shape_applicable(cfg, shape)
+                if not ok:
+                    print(f"SKIP {arch} x {shape.name}: {reason}")
+                    continue
+                res = lower_cell(cfg, shape, mesh, args.microbatches)
+                tag = "OK  " if res.ok else "FAIL"
+                print(f"{tag} {arch:22s} {shape.name:12s} mesh={res.mesh:10s}"
+                      f" lower={res.lower_s:6.1f}s compile={res.compile_s:6.1f}s"
+                      f" flops/dev={res.flops_per_dev:.3e}"
+                      f" coll/dev={res.coll_bytes_per_dev:.3e}", flush=True)
+                if res.ok and args.verbose and res.mem:
+                    print("     mem/dev: " + json.dumps(res.mem))
+                if not res.ok:
+                    print("     " + res.error)
+                    failures.append(res)
+                results.append(res.to_json())
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} cells -> {args.out}")
+    print(f"{len(results) - len(failures)}/{len(results)} cells OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Training launcher.
+
+Two modes:
+  * real CPU execution (reduced configs) — for smoke-scale runs here:
+      PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+          --reduced --steps 20
+  * pod-scale AOT check (lower+compile the full config on the production
+    mesh — the dry-run path):
+      PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+          --shape train_4k
+
+Includes the fault-tolerance loop: periodic checkpoints, automatic restore
+of the latest step on (re)start.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.models import model_api as api
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    oc = opt.OptConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
+                       compress_grads=args.compress_grads)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init_state(oc, api.model_specs(cfg))
+    step_fn = jax.jit(make_train_step(cfg, oc, args.microbatches))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    stream = TokenStream(dc)
+
+    start_step = 0
+    ck = None
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir, retain=3, async_save=True)
+        latest = ck.latest_step()
+        if latest is not None:
+            restored = ck.restore(latest, {"params": params, "opt": state})
+            params, state = restored["params"], restored["opt"]
+            start_step = latest
+            print(f"restored checkpoint step {latest}")
+
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, state, m = step_fn(params, state, batch)
+        print(f"step {i:4d} loss={float(m['loss']):.4f} "
+              f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.3f}",
+              flush=True)
+        if ck and (i + 1) % args.ckpt_every == 0:
+            ck.save(i + 1, {"params": params, "opt": state},
+                    extra={"arch": cfg.name})
+    if ck:
+        ck.wait()
+    tokens = args.steps * args.batch * args.seq
+    dt = time.time() - t0
+    print(f"done: {tokens} tokens in {dt:.1f}s "
+          f"({tokens / max(dt, 1e-9):.0f} tok/s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

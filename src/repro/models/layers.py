@@ -1,0 +1,212 @@
+"""Core neural building blocks shared by every architecture family.
+
+All functions are pure; activations enter/leave in the model compute dtype
+(bf16) while softmax/normalization statistics are computed in f32.
+Attention is *position-mask based* so the same kernel serves train, prefill,
+full-cache decode and rolling-window-cache decode (positions array carries
+slot validity for rolling buffers).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms ----
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S). NeoX half-split rotation."""
+    d_half = x.shape[-1] // 2
+    freq = theta ** (-jnp.arange(d_half, dtype=jnp.float32) / d_half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angle = positions[..., None].astype(jnp.float32) * freq  # (B,S,Dh)
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int]) -> jax.Array:
+    """Additive mask. q_pos: (B?,Sq). k_pos: (T,) or (B,T); -1 = empty slot."""
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    q = q_pos[:, :, None].astype(jnp.int32)          # (B,Sq,1)
+    k = k_pos[:, None, :].astype(jnp.int32)          # (B,1,T)
+    ok = k >= 0
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    return jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]  # (B,1,1,Sq,T)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array,
+           q_pos: jax.Array, k_pos: jax.Array, *,
+           causal: bool = True, window: Optional[int] = None,
+           softmax_scale: Optional[float] = None) -> jax.Array:
+    """GQA attention. q: (B,Sq,H,D); k,v: (B,T,KH,D). Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    scale = softmax_scale if softmax_scale is not None else d ** -0.5
+    qr = q.reshape(b, sq, kh, g, d)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    bias = _mask_bias(q_pos, k_pos, causal, window)  # (B,1,1,Sq,T)
+    scores = scores + bias                           # broadcast over (KH,G)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v)
+    return ctx.reshape(b, sq, h, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      q0: int = 0, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_chunk: int = 1024,
+                      unroll: bool = False) -> jax.Array:
+    """Scan over query blocks, touching only the kv range each block can see.
+
+    q: (B,S,H,D) with absolute positions q0 + arange(S); k/v cover positions
+    arange(T). Peak score memory is (B,KH,G,q_chunk,kv_width).
+
+    §Perf: the kv range is restricted per query block — sliding-window
+    attention reads a static window+q_chunk slice (scan-friendly dynamic
+    slice), and pure-causal attention unrolls with exact [0,(i+1)*q_chunk)
+    slices — cutting score FLOPs/bytes ~2x (causal) to ~T/(window+Cq)x
+    (SWA) versus masking the full T.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if s <= q_chunk:
+        return attend(q, k, v, q0 + jnp.arange(s), jnp.arange(t),
+                      causal=causal, window=window)
+    assert s % q_chunk == 0, (s, q_chunk)
+    nq = s // q_chunk
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+
+    if causal and window is not None and window + q_chunk < t:
+        # static-width kv slice ending at this block's last row
+        w_kv = window + q_chunk
+
+        def body(_, args):
+            i, qc = args
+            q_pos = q0 + i * q_chunk + jnp.arange(q_chunk)
+            start = jnp.clip((i + 1) * q_chunk - w_kv, 0, t - w_kv)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, w_kv, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, w_kv, axis=1)
+            k_pos = start + jnp.arange(w_kv)
+            out = attend(qc, kc, vc, q_pos, k_pos, causal=True,
+                         window=window)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs),
+                               unroll=unroll)
+        return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+    if causal and q0 == 0 and t == s:
+        # exact causal ranges; unrolled (layer stacks are scanned, so the
+        # per-layer HLO stays modest)
+        outs = []
+        for i in range(nq):
+            hi = (i + 1) * q_chunk
+            q_pos = i * q_chunk + jnp.arange(q_chunk)
+            out = attend(qs[i], k[:, :hi], v[:, :hi], q_pos,
+                         jnp.arange(hi), causal=True, window=window)
+            outs.append(out)
+        return jnp.concatenate(outs, axis=1).reshape(b, s, h, d)
+
+    k_pos = jnp.arange(t)
+
+    def body(_, args):
+        i, qc = args
+        q_pos = q0 + i * q_chunk + jnp.arange(q_chunk)
+        out = attend(qc, k, v, q_pos, k_pos, causal=causal, window=window)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs), unroll=unroll)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+# ------------------------------------------------------------------ mlp ----
+def gated_mlp(x: jax.Array, wi: jax.Array, wg: jax.Array,
+              wo: jax.Array, act=jax.nn.silu) -> jax.Array:
+    h = act(x @ wi) * (x @ wg)
+    h = constrain(h, "batch", None, "mlp")
+    return h @ wo
+
+
+# ------------------------------------------------------------- qk norm -----
+def qk_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-head RMS norm over head_dim (qwen3 style). x: (B,S,H,D)."""
+    return rmsnorm(x, scale)
+
+
+# ---------------------------------------------------------- conv (SSM) -----
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C); w: (C,K). Returns (B,S,C)."""
+    k = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(jnp.float32),
+        w.T[:, None, :].astype(jnp.float32),        # (K,1,C) -> spec below
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out.astype(x.dtype)
+
+
+def masked_cache_update(cache: jax.Array, new: jax.Array,
+                        slot: jax.Array) -> jax.Array:
+    """Write `new` (B,1,KH,D) into per-row slots of `cache` (B,T,KH,D).
+
+    Implemented as a masked select rather than a scatter: per-row dynamic
+    scatter indices on a sequence-sharded cache force the SPMD partitioner
+    into full rematerialization (replicate + repartition), whereas an
+    elementwise select keeps the "kv_seq" sharding intact on every shard.
+    """
+    t = cache.shape[1]
+    mask = jnp.arange(t)[None, :] == slot[:, None]          # (B,T)
+    return jnp.where(mask[:, :, None, None], new.astype(cache.dtype), cache)
+
+
+def conv1d_step(x_t: jax.Array, buf: jax.Array,
+                w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token causal conv with state buffer.
+
+    x_t: (B,C); buf: (B,K-1,C) past inputs; w: (C,K).
+    Returns (y_t (B,C), new_buf).
+    """
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)    # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:, :]

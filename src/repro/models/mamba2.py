@@ -1,0 +1,304 @@
+"""Mamba-2 SSD (state-space duality) — attention-free family.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the sequence is
+processed in chunks; intra-chunk interactions are dense matmuls that map onto
+the MXU, and inter-chunk state passing is a short ``lax.scan`` over chunk
+states (nc = S/Q steps). Decode carries an O(1) state
+(B, n_heads, headdim, d_state) — no KV cache — which is what makes the
+long_500k shape runnable.
+
+Projections are kept separate (wz/wx/wB/wC/wdt + per-stream depthwise convs)
+so each stream shards cleanly: d_inner over "model", B/C streams replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models.params import Spec, stack
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def layer_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    k = cfg.ssm_conv_width
+    return {
+        "ln": Spec((d,), ("embed",), "zeros"),
+        "wz": Spec((d, di), ("embed", "ssm_inner")),
+        "wx": Spec((d, di), ("embed", "ssm_inner")),
+        "wB": Spec((d, g * n), ("embed", None)),
+        "wC": Spec((d, g * n), ("embed", None)),
+        "wdt": Spec((d, nh), ("embed", "ssm_inner")),
+        "conv_x": Spec((di, k), ("ssm_inner", None)),
+        "conv_B": Spec((g * n, k), (None, None)),
+        "conv_C": Spec((g * n, k), (None, None)),
+        "A_log": Spec((nh,), ("ssm_inner",), "ssm_a"),
+        "dt_bias": Spec((nh,), ("ssm_inner",), "ssm_dt"),
+        "D": Spec((nh,), ("ssm_inner",), "ones"),
+        "norm": Spec((di,), ("ssm_inner",), "zeros"),
+        "wo": Spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    out = {
+        "embed": Spec((cfg.vocab_size, d), ("vocab", "embed"), "normal", 0.7),
+        "layers": stack(cfg.num_layers, layer_specs(cfg)),
+        "final_norm": Spec((d,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((d, cfg.vocab_size), ("embed", "vocab"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                return_final_state: bool = False, unroll: bool = False):
+    """SSD forward.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus, f32); A: (H,) negative f32;
+    Bm/Cm: (B,S,G,N). Heads are grouped: H = G * heads_per_group.
+    Returns y: (B,S,H,P) (f32).
+    """
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    hpg = h // g
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    Bc = Bm.astype(jnp.float32).reshape(b, nc, q, g, n)
+    Cc = Cm.astype(jnp.float32).reshape(b, nc, q, g, n)
+
+    dA = dtc * A[None, None, None, :]                    # (B,nc,Q,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                         # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within chunk, MXU-friendly) ----
+    # decay L[i,j] = exp(cum[i]-cum[j]) for i>=j
+    li = cum[:, :, :, None, :]                           # (B,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]                           # (B,nc,1,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(li - lj), 0.0)           # (B,nc,Q,Q,H)
+    cb = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)        # (B,nc,Q,Q,G)
+    cb = jnp.repeat(cb, hpg, axis=-1)                    # (B,nc,Q,Q,H)
+    w = cb * L * dtc[:, :, None, :, :]                   # weight over j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xf)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    xdt = xf * (dtc * decay_to_end)[..., None]           # (B,nc,Q,H,P)
+    Bh = jnp.repeat(Bc, hpg, axis=3)                     # (B,nc,Q,H,N)
+    states = jnp.einsum("bcqhn,bcqhp->bchnp", Bh, xdt)   # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def step(carry, args):
+        st, dec = args                                   # (B,H,N,P),(B,H)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                # emit PREVIOUS state
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=unroll)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (B,nc,H,N,P)
+
+    # ---- inter-chunk output ----
+    Ch = jnp.repeat(Cc, hpg, axis=3)                     # (B,nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchnp->bcqhp", Ch, prev_states)
+    y_off = y_off * jnp.exp(cum)[..., None]
+    y = (y_intra + y_off).reshape(b, s, h, p)
+    if return_final_state:
+        # cache layout is (B,H,P,N)
+        return y, final_state.transpose(0, 1, 3, 2)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward
+# ---------------------------------------------------------------------------
+
+
+def ssm_block(cfg: ModelConfig, p: Dict, x_in: jax.Array,
+              collect_state: bool = False):
+    b, s, _ = x_in.shape
+    di, nh, pdim = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    kw = cfg.ssm_conv_width - 1
+    h = nn.rmsnorm(x_in, p["ln"])
+    z = h @ p["wz"]
+    x_pre, B_pre, C_pre = h @ p["wx"], h @ p["wB"], h @ p["wC"]
+    x = jax.nn.silu(nn.causal_conv1d(x_pre, p["conv_x"]))
+    Bm = jax.nn.silu(nn.causal_conv1d(B_pre, p["conv_B"]))
+    Cm = jax.nn.silu(nn.causal_conv1d(C_pre, p["conv_C"]))
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    x = constrain(x, "batch", None, "ssm_inner")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    # pad the sequence to a chunk multiple; dt=0 on padding makes it inert
+    # (decay exp(0)=1, contribution dt*x=0), so states/outputs are exact
+    s_pad = -(-s // cfg.ssm_chunk) * cfg.ssm_chunk
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0))
+        x, Bm, Cm = (jnp.pad(t, pad) for t in (x, Bm, Cm))
+        dt = jnp.pad(dt, pad)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        y, final = kops.ssd_scan(
+            x.reshape(b, s_pad, nh, pdim), dt, A,
+            Bm.reshape(b, s_pad, g, n), Cm.reshape(b, s_pad, g, n),
+            chunk=min(cfg.ssm_chunk, s_pad))
+    else:
+        res = ssd_chunked(x.reshape(b, s_pad, nh, pdim), dt, A,
+                          Bm.reshape(b, s_pad, g, n),
+                          Cm.reshape(b, s_pad, g, n),
+                          cfg.ssm_chunk, return_final_state=collect_state,
+                          unroll=cfg.unroll_scans)
+        y, final = res if collect_state else (res, None)
+    y = y + (p["D"].astype(jnp.float32)[None, None, :, None]
+             * x.astype(jnp.float32).reshape(b, s_pad, nh, pdim))
+    y = y.reshape(b, s_pad, di)[:, :s].astype(x_in.dtype)
+    y = nn.rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = x_in + y @ p["wo"]
+    if collect_state:
+        state = {"h": final,
+                 "conv_x": x_pre[:, -kw:, :].astype(jnp.float32),
+                 "conv_B": B_pre[:, -kw:, :].astype(jnp.float32),
+                 "conv_C": C_pre[:, -kw:, :].astype(jnp.float32)}
+        return out, state
+    return out
+
+
+def forward_hidden(cfg: ModelConfig, params: Dict, embeds: jax.Array, *,
+                   collect_state: bool = False, remat: bool = False):
+    from repro.models import transformer as tfm
+
+    def body(x, p):
+        x = ssm_block(cfg, p, x)
+        seq_ax = "seq_sp" if cfg.seq_parallel else None
+        return constrain(x, "batch", seq_ax, "embed"), None
+
+    fn = tfm._remat(cfg, body) if remat else body
+    x, _ = jax.lax.scan(fn, embeds, params["layers"],
+                        unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    return x, None, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode — O(1) state
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int,
+                context_len: int) -> Dict[str, Any]:
+    del context_len                                      # O(1) state!
+    l, b = cfg.num_layers, batch_size
+    nh, pdim, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    kw = cfg.ssm_conv_width - 1
+    gn = cfg.ssm_ngroups * n
+    return {
+        "h": Spec((l, b, nh, pdim, n),
+                  ("layers", "batch", "ssm_inner", None, None), "zeros"),
+        "conv_x": Spec((l, b, kw, cfg.d_inner),
+                       ("layers", "batch", None, "ssm_inner"), "zeros"),
+        "conv_B": Spec((l, b, kw, gn), ("layers", "batch", None, None),
+                       "zeros"),
+        "conv_C": Spec((l, b, kw, gn), ("layers", "batch", None, None),
+                       "zeros"),
+        "pos": Spec((b,), ("batch",), "zeros"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, context_len: int) -> Dict:
+    tree = cache_specs(cfg, batch_size, context_len)
+    from repro.models import params as pm
+    cache = pm.tree_map(lambda s: jnp.zeros(s.shape, jnp.float32), tree)
+    cache["pos"] = jnp.zeros(tree["pos"].shape, jnp.int32)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict,
+            context_len=None):
+    """Prompt processing with exact decode-state handoff."""
+    from repro.models import transformer as tfm
+    tok = batch["tokens"]
+    b, s = tok.shape
+    embeds = jnp.take(params["embed"], tok, axis=0)
+
+    def body(x, p):
+        x, state = ssm_block(cfg, p, x, collect_state=True)
+        seq_ax = "seq_sp" if cfg.seq_parallel else None
+        return constrain(x, "batch", seq_ax, "embed"), state
+
+    x, states = jax.lax.scan(body, embeds, params["layers"],
+                             unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    logits = tfm.logits_fn(cfg, params, x[:, -1:, :])
+    cache = dict(states)                        # (L, ...) stacked by scan
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+    from repro.models import transformer as tfm
+    tok = batch["token"]
+    x = jnp.take(params["embed"], tok, axis=0)           # (B,1,D)
+    b = x.shape[0]
+    di, nh, pdim = cfg.d_inner, cfg.ssm_nheads, cfg.ssm_headdim
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+
+    def body(x, args):
+        p, hst, cx, cB, cC = args
+        hh = nn.rmsnorm(x, p["ln"])[:, 0, :]             # (B,D)
+        z = hh @ p["wz"]
+        xs, cx = nn.conv1d_step(hh @ p["wx"], cx, p["conv_x"])
+        Bs, cB = nn.conv1d_step(hh @ p["wB"], cB, p["conv_B"])
+        Cs, cC = nn.conv1d_step(hh @ p["wC"], cC, p["conv_C"])
+        xs, Bs, Cs = map(jax.nn.silu, (xs, Bs, Cs))
+        dt = jax.nn.softplus((hh @ p["wdt"]).astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # (B,H)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        xh = xs.astype(jnp.float32).reshape(b, nh, pdim)
+        Bh = jnp.repeat(Bs.astype(jnp.float32).reshape(b, g, n),
+                        nh // g, axis=1)                 # (B,H,N)
+        Ch = jnp.repeat(Cs.astype(jnp.float32).reshape(b, g, n),
+                        nh // g, axis=1)
+        decay = jnp.exp(dt * A)                          # (B,H)
+        hst = (hst * decay[:, :, None, None]
+               + (dt[:, :, None] * xh)[..., None] * Bh[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", hst, Ch)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(b, di).astype(x.dtype)
+        y = nn.rmsnorm(y * jax.nn.silu(z), p["norm"])
+        x = x + (y @ p["wo"])[:, None, :]
+        return x, (hst, cx, cB, cC)
+
+    x, (h_new, cx, cB, cC) = jax.lax.scan(
+        body, x, (params["layers"], cache["h"], cache["conv_x"],
+                  cache["conv_B"], cache["conv_C"]), unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    logits = tfm.logits_fn(cfg, params, x)
+    new_cache = dict(cache)
+    new_cache.update(h=h_new, conv_x=cx, conv_B=cB, conv_C=cC,
+                     pos=cache["pos"] + 1)
+    return logits, new_cache

@@ -1,0 +1,218 @@
+"""Unified model API: every architecture family behind one functional
+interface, dispatched on ``cfg.family``.
+
+  model_specs(cfg)                 -> Spec tree (single source of truth)
+  abstract_params(cfg)             -> ShapeDtypeStructs (no allocation)
+  init_params(cfg, rng)            -> materialized params
+  param_shardings(cfg, mesh)       -> NamedSharding tree
+  loss_fn(cfg, params, batch)      -> (scalar loss, metrics)
+  prefill(cfg, params, batch)      -> (logits, cache)
+  decode_step(cfg, params, cache, batch) -> (logits, cache)
+  cache_specs / init_cache / abstract_cache
+  make_batch(cfg, shape, rng)      -> concrete batch (smoke tests)
+  input_specs(cfg, shape)          -> ShapeDtypeStruct batch (dry-run)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, InputShape, DENSE, MOE, HYBRID,
+                                SSM, ENCDEC, VLM)
+from repro.models import params as pm
+from repro.models import transformer as tfm
+from repro.models import rglru as rg
+from repro.models import mamba2 as mb
+from repro.models import whisper as wh
+from repro.sharding import constrain
+
+_FAMILY_MODULES = {DENSE: tfm, MOE: tfm, VLM: tfm, HYBRID: rg, SSM: mb,
+                   ENCDEC: wh}
+
+
+def _mod(cfg: ModelConfig):
+    return _FAMILY_MODULES[cfg.family]
+
+
+# ------------------------------------------------------------- params ------
+def model_specs(cfg: ModelConfig):
+    return _mod(cfg).model_specs(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return pm.abstract(model_specs(cfg), jnp.bfloat16)
+
+
+def init_params(cfg: ModelConfig, rng):
+    return pm.init(model_specs(cfg), rng, jnp.bfloat16)
+
+
+def _sharding_specs(cfg: ModelConfig):
+    tree = model_specs(cfg)
+    if cfg.param_fsdp:
+        tree = pm.tree_map(pm.fsdp_spec, tree)
+    return tree
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    return pm.shardings(_sharding_specs(cfg), mesh)
+
+
+def param_pspecs(cfg: ModelConfig, mesh):
+    return pm.pspecs(_sharding_specs(cfg), mesh)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return pm.count(model_specs(cfg))
+
+
+# --------------------------------------------------------------- loss ------
+def _lm_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array,
+             mask: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict,
+            remat: bool = True) -> Tuple[jax.Array, Dict]:
+    """Next-token CE (+ MoE aux) for every family."""
+    if cfg.family == ENCDEC:
+        logits = wh.decode_train(cfg, params, batch["tokens"],
+                                 wh.encode(cfg, params, batch["frames"]),
+                                 remat=remat)
+        loss = _lm_loss(cfg, logits, batch["labels"], batch["mask"])
+        return loss, {"ce": loss, "aux": 0.0}
+
+    if cfg.family in (DENSE, MOE, VLM):
+        embeds = tfm.embed_inputs(cfg, params, batch)
+        h, _, aux = tfm.forward_hidden(cfg, params, embeds, remat=remat)
+        if cfg.family == VLM:                    # loss over text positions
+            h = h[:, cfg.n_img_tokens:, :]
+        logits = tfm.logits_fn(cfg, params, h)
+    elif cfg.family == HYBRID:
+        embeds = jnp.take(params["embed"], batch["tokens"], axis=0)
+        embeds = constrain(embeds, "batch", None, "embed")
+        h, _, aux = rg.forward_hidden(cfg, params, embeds, remat=remat)
+        logits = tfm.logits_fn(cfg, params, h)
+    elif cfg.family == SSM:
+        embeds = jnp.take(params["embed"], batch["tokens"], axis=0)
+        embeds = constrain(embeds, "batch", None, "embed")
+        h, _, aux = mb.forward_hidden(cfg, params, embeds, remat=remat)
+        logits = tfm.logits_fn(cfg, params, h)
+    else:
+        raise ValueError(cfg.family)
+    ce = _lm_loss(cfg, logits, batch["labels"], batch["mask"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------- serve ------
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict,
+            context_len: Optional[int] = None):
+    return _mod(cfg).prefill(cfg, params, batch, context_len)
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+    return _mod(cfg).decode_step(cfg, params, cache, batch)
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int, context_len: int):
+    return _mod(cfg).cache_specs(cfg, batch_size, context_len)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, context_len: int):
+    return _mod(cfg).init_cache(cfg, batch_size, context_len)
+
+
+def abstract_cache(cfg: ModelConfig, batch_size: int, context_len: int):
+    """ShapeDtypeStruct cache with the dtypes init_cache would produce."""
+    concrete_dtypes = jax.eval_shape(
+        lambda: init_cache(cfg, batch_size, context_len))
+    return concrete_dtypes
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch_size: int,
+                    context_len: int):
+    return pm.shardings(cache_specs(cfg, batch_size, context_len), mesh)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch_size: int, context_len: int):
+    return pm.pspecs(cache_specs(cfg, batch_size, context_len), mesh)
+
+
+# ------------------------------------------------------------- inputs ------
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    return seq_len - cfg.n_img_tokens if cfg.family == VLM else seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, pm.Spec]:
+    """Spec tree for a train/prefill batch (decode handled separately)."""
+    b = shape.global_batch
+    s = _text_len(cfg, shape.seq_len)
+    out = {"tokens": pm.Spec((b, s), ("batch", None), "zeros")}
+    if shape.kind == "train":
+        out["labels"] = pm.Spec((b, s), ("batch", None), "zeros")
+        out["mask"] = pm.Spec((b, s), ("batch", None), "ones")
+    if cfg.family == VLM:
+        out["image_embeds"] = pm.Spec((b, cfg.n_img_tokens, cfg.d_model),
+                                      ("batch", None, "embed"))
+    if cfg.family == ENCDEC:
+        out["frames"] = pm.Spec((b, cfg.n_enc_frames, cfg.d_model),
+                                ("batch", None, "embed"))
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape):
+    return {"token": pm.Spec((shape.global_batch, 1), ("batch", None),
+                             "zeros")}
+
+
+_BATCH_DTYPES = {"tokens": jnp.int32, "labels": jnp.int32,
+                 "token": jnp.int32, "mask": jnp.float32,
+                 "image_embeds": jnp.bfloat16, "frames": jnp.bfloat16}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+    tree = (decode_batch_specs(cfg, shape) if shape.kind == "decode"
+            else batch_specs(cfg, shape))
+    return {k: jax.ShapeDtypeStruct(s.shape, _BATCH_DTYPES[k])
+            for k, s in tree.items()}
+
+
+def batch_shardings(cfg: ModelConfig, mesh, shape: InputShape):
+    tree = (decode_batch_specs(cfg, shape) if shape.kind == "decode"
+            else batch_specs(cfg, shape))
+    return pm.shardings(tree, mesh)
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, rng=None,
+               batch: Optional[int] = None, seq: Optional[int] = None
+               ) -> Dict[str, jax.Array]:
+    """Concrete random batch for smoke tests / real CPU execution."""
+    rng = rng if rng is not None else np.random.default_rng(0)
+    b = batch or shape.global_batch
+    s = _text_len(cfg, seq or shape.seq_len)
+    if shape.kind == "decode":
+        return {"token": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)}
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                 jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        out["mask"] = jnp.ones((b, s), jnp.float32)
+    if cfg.family == VLM:
+        out["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.d_model)) * 0.02,
+            jnp.bfloat16)
+    if cfg.family == ENCDEC:
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_enc_frames, cfg.d_model)) * 0.02,
+            jnp.bfloat16)
+    return out

@@ -1,0 +1,110 @@
+"""Single-source-of-truth parameter declaration.
+
+Each model family declares its parameters once as a pytree of ``Spec`` leaves
+(shape + logical axes + initializer). From that single tree we derive:
+  * ``abstract(tree)``  — ShapeDtypeStructs (dry-run, no allocation)
+  * ``init(tree, rng)`` — materialized parameters (smoke tests / training)
+  * ``shardings(tree, mesh)`` — NamedShardings via repro.sharding rules
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | lru_a | pos
+    scale: float = 1.0          # multiplier on fan-in-scaled normal
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def tree_map(f, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def stack(n: int, tree):
+    """Prepend a scanned 'layers' dim of size n to every Spec in the tree."""
+    return tree_map(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        tree)
+
+
+def abstract(tree, dtype=jnp.bfloat16):
+    return tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), tree)
+
+
+def shardings(tree, mesh, dtype=jnp.bfloat16):
+    return tree_map(lambda s: shd.named_sharding(mesh, s.shape, s.axes), tree)
+
+
+def pspecs(tree, mesh):
+    return tree_map(lambda s: shd.spec_for(mesh, s.shape, s.axes), tree)
+
+
+def _init_leaf(s: Spec, key, dtype):
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, dtype)
+    if s.init == "lru_a":
+        # RG-LRU Lambda init: a in [0.9, 0.999] -> Lambda = softplus^-1 scheme
+        u = jax.random.uniform(key, s.shape, jnp.float32, 0.9, 0.999)
+        lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))  # inverse softplus
+        return lam.astype(dtype)
+    if s.init == "ssm_a":
+        # A_log init: A in [1, 16) -> log
+        u = jax.random.uniform(key, s.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if s.init == "ssm_dt":
+        # dt bias: softplus^-1 of dt in [1e-3, 1e-1]
+        u = jax.random.uniform(key, s.shape, jnp.float32, math.log(1e-3),
+                               math.log(1e-1))
+        dt = jnp.exp(u)
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    if s.init == "pos":
+        # sinusoid-free small normal for learned positional embeddings
+        return (0.02 * jax.random.normal(key, s.shape, jnp.float32)
+                ).astype(dtype)
+    # fan-in scaled normal
+    fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+    std = s.scale / math.sqrt(max(fan_in, 1))
+    return (std * jax.random.normal(key, s.shape, jnp.float32)).astype(dtype)
+
+
+def init(tree, rng, dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def fsdp_spec(s: Spec) -> Spec:
+    """Add the data-parallel ("zero") axis to the largest effectively-
+    replicated dim — FSDP-style parameter sharding (and the ZeRO-1 transform
+    for optimizer states). Needed to FIT models like llama3-405b whose
+    tensor-parallel-only shards exceed per-chip HBM."""
+    shd.RULES.setdefault("zero", ("__dp__",))
+    axes = list(s.axes)
+    best, best_dim = None, 0
+    for i, (d, a) in enumerate(zip(s.shape, axes)):
+        replicated = a is None or not any(shd.RULES.get(a, ()))
+        if replicated and d > best_dim:
+            best, best_dim = i, d
+    if best is not None:
+        axes[best] = "zero"
+    return Spec(s.shape, tuple(axes), s.init, s.scale)

@@ -1,0 +1,238 @@
+"""Whisper-small backbone: transformer encoder over precomputed audio frame
+embeddings (the conv frontend is a STUB per the assignment — ``input_specs``
+supplies (B, n_enc_frames, d_model) tensors) + causal decoder with
+cross-attention.
+
+Deviation noted in DESIGN.md: the decoder uses RoPE instead of Whisper's
+learned absolute positions so that the assigned decode_32k cache length is
+well-defined; the encoder keeps learned positions over its fixed 1500 frames.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as nn
+from repro.models import transformer as tfm
+from repro.models.params import Spec, stack
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _mlp2_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wi": Spec((d, f), ("embed", "mlp")),
+            "wo": Spec((f, d), ("mlp", "embed"))}
+
+
+def _enc_layer(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": Spec((cfg.d_model,), ("embed",), "zeros"),
+            "attn": tfm.attn_specs(cfg),
+            "ln2": Spec((cfg.d_model,), ("embed",), "zeros"),
+            "mlp": _mlp2_specs(cfg)}
+
+
+def _dec_layer(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": Spec((cfg.d_model,), ("embed",), "zeros"),
+            "self_attn": tfm.attn_specs(cfg),
+            "ln_x": Spec((cfg.d_model,), ("embed",), "zeros"),
+            "cross_attn": tfm.attn_specs(cfg),
+            "ln2": Spec((cfg.d_model,), ("embed",), "zeros"),
+            "mlp": _mlp2_specs(cfg)}
+
+
+def model_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "enc_pos": Spec((cfg.n_enc_frames, d), ("frames", "embed"), "pos"),
+        "enc_layers": stack(cfg.n_enc_layers, _enc_layer(cfg)),
+        "enc_norm": Spec((d,), ("embed",), "zeros"),
+        "embed": Spec((cfg.vocab_size, d), ("vocab", "embed"), "normal", 0.7),
+        "dec_layers": stack(cfg.num_layers, _dec_layer(cfg)),
+        "final_norm": Spec((d,), ("embed",), "zeros"),
+        "lm_head": Spec((d, cfg.vocab_size), ("embed", "vocab")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _mlp2(p: Dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]
+
+
+def _attn(cfg: ModelConfig, p: Dict, xq: jax.Array, xkv: jax.Array,
+          q_pos, k_pos, causal: bool, rope: bool):
+    b, sq, _ = xq.shape
+    q = (xq @ p["wq"]).reshape(b, sq, cfg.n_heads, cfg.head_dim)
+    k = (xkv @ p["wk"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+    v = (xkv @ p["wv"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+    if rope:
+        q = nn.apply_rope(q, q_pos, cfg.rope_theta)
+        k = nn.apply_rope(k, k_pos, cfg.rope_theta)
+    ctx = nn.attend(q, k, v, q_pos, k_pos, causal=causal)
+    return ctx.reshape(b, sq, cfg.q_dim) @ p["wo"], (k, v)
+
+
+def encode(cfg: ModelConfig, params: Dict, frames: jax.Array) -> jax.Array:
+    """frames: (B, F, D) precomputed embeddings (stub frontend)."""
+    x = frames.astype(jnp.bfloat16) + params["enc_pos"][None].astype(
+        jnp.bfloat16)
+    x = constrain(x, "batch", None, "embed")
+    f = x.shape[1]
+    pos = jnp.arange(f)
+
+    def body(x, p):
+        h = nn.rmsnorm(x, p["ln1"])
+        out, _ = _attn(cfg, p["attn"], h, h, pos, pos, causal=False,
+                       rope=False)
+        x = x + out
+        h2 = nn.rmsnorm(x, p["ln2"])
+        return x + _mlp2(p["mlp"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.unroll_scans)
+    return nn.rmsnorm(x, params["enc_norm"])
+
+
+def decode_train(cfg: ModelConfig, params: Dict, tokens: jax.Array,
+                 enc_out: jax.Array, remat: bool = False):
+    b, s = tokens.shape
+    f = enc_out.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, "embed")
+    pos, fpos = jnp.arange(s), jnp.arange(f)
+
+    def body(x, p):
+        h = nn.rmsnorm(x, p["ln1"])
+        out, _ = _attn(cfg, p["self_attn"], h, h, pos, pos, causal=True,
+                       rope=True)
+        x = x + out
+        hx = nn.rmsnorm(x, p["ln_x"])
+        out, _ = _attn(cfg, p["cross_attn"], hx, enc_out, pos, fpos,
+                       causal=False, rope=False)
+        x = x + out
+        h2 = nn.rmsnorm(x, p["ln2"])
+        return x + _mlp2(p["mlp"], h2), None
+
+    fn = tfm._remat(cfg, body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["dec_layers"],
+                        unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch_size: int,
+                context_len: int) -> Dict[str, Any]:
+    cap = context_len + 128
+    l, b = cfg.num_layers, batch_size
+    kv = Spec((l, b, cap, cfg.n_kv_heads, cfg.head_dim),
+              ("layers", "batch", "kv_seq" if cfg.decode_seq_shard else None,
+               None, None), "zeros")
+    xkv = Spec((l, b, cfg.n_enc_frames, cfg.n_kv_heads, cfg.head_dim),
+               ("layers", "batch", None, None, None), "zeros")
+    return {"k": kv, "v": kv, "xk": xkv, "xv": xkv,
+            "k_pos": Spec((b, cap), ("batch", None), "zeros"),
+            "pos": Spec((b,), ("batch",), "zeros")}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, context_len: int) -> Dict:
+    from repro.models import params as pm
+    tree = cache_specs(cfg, batch_size, context_len)
+    cache = pm.tree_map(lambda s: jnp.zeros(s.shape, jnp.bfloat16), tree)
+    cache["k_pos"] = jnp.full(tree["k_pos"].shape, -1, jnp.int32)
+    cache["pos"] = jnp.zeros(tree["pos"].shape, jnp.int32)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict,
+            context_len: Optional[int] = None):
+    """Encode frames, build the cross-attn cache, run decoder over prompt."""
+    frames, tokens = batch["frames"], batch["tokens"]
+    b, s = tokens.shape
+    context_len = context_len if context_len is not None else s
+    enc_out = encode(cfg, params, frames)
+    f = enc_out.shape[1]
+    cache = init_cache(cfg, b, context_len)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos, fpos = jnp.arange(s), jnp.arange(f)
+
+    def body(x, p):
+        h = nn.rmsnorm(x, p["ln1"])
+        out, kv = _attn(cfg, p["self_attn"], h, h, pos, pos, causal=True,
+                        rope=True)
+        x = x + out
+        hx = nn.rmsnorm(x, p["ln_x"])
+        out, xkv = _attn(cfg, p["cross_attn"], hx, enc_out, pos, fpos,
+                         causal=False, rope=False)
+        x = x + out
+        h2 = nn.rmsnorm(x, p["ln2"])
+        return x + _mlp2(p["mlp"], h2), (kv, xkv)
+
+    x, ((ks, vs), (xks, xvs)) = jax.lax.scan(body, x, params["dec_layers"],
+                                             unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    logits = x[:, -1:, :] @ params["lm_head"]
+    cache["k"] = cache["k"].at[:, :, :s].set(ks)
+    cache["v"] = cache["v"].at[:, :, :s].set(vs)
+    cache["xk"], cache["xv"] = xks, xvs
+    cache["k_pos"] = cache["k_pos"].at[:, :s].set(jnp.arange(s)[None])
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Dict, cache: Dict, batch: Dict):
+    tok = batch["token"]
+    x = jnp.take(params["embed"], tok, axis=0)
+    b = x.shape[0]
+    pos = cache["pos"]                                   # (B,)
+    positions = pos[:, None]
+    slot = pos.astype(jnp.int32)
+    rows = jnp.arange(b)
+    k_pos = jnp.where(jnp.arange(cache["k_pos"].shape[1])[None, :]
+                  == slot[:, None], pos[:, None], cache["k_pos"])
+    fpos = jnp.arange(cfg.n_enc_frames)
+
+    def body(x, args):
+        p, kc, vc, xk, xv = args
+        h = nn.rmsnorm(x, p["ln1"])
+        sa = p["self_attn"]
+        q = (h @ sa["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ sa["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ sa["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = nn.apply_rope(q, positions, cfg.rope_theta)
+        k = nn.apply_rope(k, positions, cfg.rope_theta)
+        kc = nn.masked_cache_update(kc, k, slot)
+        vc = nn.masked_cache_update(vc, v, slot)
+        ctx = nn.attend(q, kc, vc, positions, k_pos, causal=True)
+        x = x + ctx.reshape(b, 1, cfg.q_dim) @ sa["wo"]
+        hx = nn.rmsnorm(x, p["ln_x"])
+        ca = p["cross_attn"]
+        qx = (hx @ ca["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        ctx = nn.attend(qx, xk, xv, positions, fpos, causal=False)
+        x = x + ctx.reshape(b, 1, cfg.q_dim) @ ca["wo"]
+        h2 = nn.rmsnorm(x, p["ln2"])
+        return x + _mlp2(p["mlp"], h2), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=cfg.unroll_scans)
+    x = nn.rmsnorm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    new_cache = dict(cache)
+    new_cache.update(k=k_new, v=v_new, k_pos=k_pos, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,164 @@
+"""Continuous-batching serving engine.
+
+A fixed decode batch of B slots over a shared KV cache; finished slots are
+refilled from the waiting queue without stopping the other rows (per-row
+cache positions — see models/transformer.cache_specs). Prefill runs at
+bucketed prompt lengths to bound recompilation, and the resulting
+single-request cache is scattered into the live batch cache.
+
+This engine is what an FDN TargetPlatform runs when it executes `serve-*`
+functions for real; the FDN layers (scheduler, monitoring, energy) sit on
+top and deliver requests to engines on different platforms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model_api as api
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_s is not None
+
+
+def _buckets(max_len: int) -> List[int]:
+    out, b = [], 16
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return out
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_context: int = 256, greedy: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.cap = api.cache_specs(cfg, batch_size, max_context)
+        self.max_context = max_context
+        self.clock = clock
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.cache = api.init_cache(cfg, batch_size, max_context)
+        self._steps = 0
+        self._generated = 0
+        self.buckets = _buckets(max_context)
+
+        self._decode = jax.jit(
+            lambda p, c, b: api.decode_step(cfg, p, c, b))
+        self._prefill = jax.jit(
+            lambda p, b: api.prefill(cfg, p, b, max_context))
+        self._slot_tokens = np.zeros((batch_size, 1), np.int32)
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, req: Request):
+        req.submitted_s = self.clock()
+        self.queue.append(req)
+
+    def _bucket_len(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            n = len(req.prompt)
+            pad = self._bucket_len(n)
+            tokens = np.zeros((1, pad), np.int32)
+            tokens[0, :n] = req.prompt
+            batch = {"tokens": jnp.asarray(tokens),
+                     "prompt_lens": jnp.asarray([n], np.int32)}
+            logits, small = self._prefill(self.params, batch)
+            tok = int(jnp.argmax(logits[0, -1]))
+            self._insert_cache(slot, small)
+            req.out_tokens.append(tok)
+            req.first_token_s = self.clock()
+            self._slot_tokens[slot, 0] = tok
+            self.slots[slot] = req
+
+    def _insert_cache(self, slot: int, small):
+        """Scatter a batch=1 cache into batch slot `slot`."""
+        def ins(big, small_leaf):
+            # find the batch axis: big is B there, small is 1, and every
+            # other dim matches (k/v/(h) carry layers first; k_pos/pos are
+            # batch-leading — shape-based detection handles both)
+            for ax in range(big.ndim):
+                if (big.shape[ax] == self.B and small_leaf.shape[ax] == 1
+                        and big.shape[:ax] == small_leaf.shape[:ax]
+                        and big.shape[ax + 1:] == small_leaf.shape[ax + 1:]):
+                    idx = [slice(None)] * big.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    return big.at[tuple(idx)].set(
+                        small_leaf.astype(big.dtype))
+            raise ValueError((big.shape, small_leaf.shape))
+
+        self.cache = jax.tree_util.tree_map(ins, self.cache, small)
+
+    # ------------------------------------------------------------- churn --
+    def step(self) -> int:
+        """One engine iteration: admit, decode, retire. Returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        batch = {"token": jnp.asarray(self._slot_tokens)}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        self._steps += 1
+        toks = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1),
+                          np.int32)
+        for i in active:
+            req = self.slots[i]
+            tok = int(toks[i])
+            req.out_tokens.append(tok)
+            self._generated += 1
+            self._slot_tokens[i, 0] = tok
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.out_tokens) >= req.max_new_tokens:
+                req.done_s = self.clock()
+                self.slots[i] = None       # slot freed; next step refills
+        return len(active)
+
+    def run(self, requests: List[Request], max_steps: int = 10_000
+            ) -> List[Request]:
+        for r in requests:
+            self.submit(r)
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return requests
+
+    # ------------------------------------------------------------ stats ---
+    def stats(self) -> Dict[str, float]:
+        return {"decode_steps": self._steps,
+                "tokens_generated": self._generated,
+                "slot_utilization": self._generated /
+                max(self._steps * self.B, 1)}

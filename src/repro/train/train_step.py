@@ -1,0 +1,92 @@
+"""Training / serving step builders — the jit-able functions the launcher,
+dry-run and FDN platforms all share.
+
+``train_step``: fwd + bwd (+ optional microbatch grad accumulation via scan)
++ AdamW update. ``prefill_step`` / ``serve_step``: inference entry points.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.models import model_api as api
+from repro.train import optimizer as opt
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, oc: opt.OptConfig,
+                    num_microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def loss(params, mb):
+        l, metrics = api.loss_fn(cfg, params, mb, remat=True)
+        return l, metrics
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            mbs = _split_microbatches(batch, num_microbatches)
+
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(acc, (g0, 0.0), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / num_microbatches, grads)
+            l = lsum / num_microbatches
+        else:
+            (l, _), grads = grad_fn(params, batch)
+        new_params, new_state, om = opt.apply_updates(oc, params, grads,
+                                                      opt_state)
+        metrics = {"loss": l, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, context_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        return api.prefill(cfg, params, batch, context_len)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: new token for every sequence, cache in/out."""
+    def serve_step(params, cache, batch):
+        return api.decode_step(cfg, params, cache, batch)
+    return serve_step
+
+
+def default_microbatches(cfg: ModelConfig, shape: InputShape,
+                         n_chips: int) -> int:
+    """Activation-memory heuristic: keep saved layer inputs under ~2 GiB/chip.
+
+    With remat='dots', per-layer live activations ~= batch*seq*d_model*2B
+    (+ MoE dispatch buffers); we bound sum over layers / chips.
+    """
+    if shape.kind != "train":
+        return 1
+    depth = cfg.num_layers
+    bytes_per_layer = shape.global_batch * shape.seq_len * cfg.d_model * 2
+    total = bytes_per_layer * max(depth, 1)
+    budget = 2 * (1 << 30) * n_chips
+    n = max(1, int(-(-total // budget)))
+    # round to a divisor of global_batch
+    while shape.global_batch % n:
+        n += 1
+    return min(n, shape.global_batch)

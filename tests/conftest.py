@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA device-count flag here — smoke tests and
+benches must see 1 CPU device (the 512-device flag belongs ONLY to the
+dry-run / roofline entry points)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,145 @@
+"""Dry-run / roofline harness unit tests: HLO collective parsing, depth
+control, analytic MODEL_FLOPS, and enc-dec/VLM decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.launch.dryrun_lib import (_shape_bytes, collective_stats,
+                                     full_depth_units, with_depth)
+
+HLO_SNIPPET = """
+HloModule test
+fused_computation {
+  ...
+}
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(bf16[128,256]{1,0} %p0), dimensions={0}
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), to_apply=%add
+  %ar2.start = f32[64]{0} all-reduce-start(f32[64]{0} %y), to_apply=%add
+  %ar2.done = f32[64]{0} all-reduce-done(f32[64]{0} %ar2.start)
+  %rs = bf16[8,32]{1,0} reduce-scatter(bf16[128,32]{1,0} %z), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4]{0} %w), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(f32[8,4]{1,0} %a, f32[4,8]{1,0} %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("pred[]") == 1 or _shape_bytes("pred[]") == 0
+
+
+def test_collective_stats_parses_operand_bytes():
+    st = collective_stats(HLO_SNIPPET)
+    by = st["bytes_by_kind"]
+    assert by["all-gather"] == 128 * 256 * 2          # operand, not output
+    # all-reduce + all-reduce-start counted once each; -done skipped
+    assert by["all-reduce"] == 16 * 128 * 4 + 64 * 4
+    assert by["reduce-scatter"] == 128 * 32 * 2
+    assert by["collective-permute"] == 4 * 4
+    assert st["counts"]["all-reduce"] == 2
+    assert st["total_bytes"] == sum(by.values())
+
+
+@pytest.mark.parametrize("arch,units", [
+    ("qwen3-1.7b", 28), ("llama3-405b", 126), ("recurrentgemma-9b", 12),
+    ("whisper-small", 12), ("mamba2-2.7b", 64),
+])
+def test_full_depth_units(arch, units):
+    assert full_depth_units(get_config(arch)) == units
+
+
+def test_with_depth_family_semantics():
+    rg = get_config("recurrentgemma-9b")
+    assert with_depth(rg, 2).num_layers == 2 * 3 + 2   # supers + tail
+    wh = get_config("whisper-small")
+    c = with_depth(wh, 3)
+    assert c.num_layers == 3 and c.n_enc_layers == 3
+    assert with_depth(get_config("qwen3-0.6b"), 5).num_layers == 5
+
+
+def test_model_flops_formulas():
+    from benchmarks.roofline import model_flops
+    from repro.configs.base import TRAIN_4K, DECODE_32K
+    cfg = get_config("qwen3-1.7b")
+    n = cfg.n_active_params()
+    assert model_flops(cfg, TRAIN_4K) == 6.0 * n * TRAIN_4K.tokens
+    assert model_flops(cfg, DECODE_32K) == 2.0 * n * DECODE_32K.global_batch
+    moe = get_config("mixtral-8x7b")
+    assert moe.n_active_params() < moe.n_params()      # top-2 of 8
+
+
+def test_whisper_decode_matches_decode_train():
+    from repro.models import model_api as api
+    from repro.models import whisper as wh
+    cfg = get_config("whisper-small").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.normal(size=(1, cfg.n_enc_frames, cfg.d_model))
+                         * 0.02, jnp.bfloat16)
+    toks = rng.integers(1, cfg.vocab_size, (1, 8)).astype(np.int32)
+    logits, cache = api.prefill(cfg, params,
+                                {"frames": frames,
+                                 "tokens": jnp.asarray(toks)}, 24)
+    enc = wh.encode(cfg, params, frames)
+    seq = list(toks[0])
+    for _ in range(3):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        ref = wh.decode_train(cfg, params, jnp.asarray([seq], jnp.int32),
+                              enc)
+        assert int(jnp.argmax(ref[0, -1])) == nxt
+        seq.append(nxt)
+        logits, cache = api.decode_step(
+            cfg, params, cache, {"token": jnp.asarray([[nxt]], jnp.int32)})
+
+
+def test_vlm_decode_matches_full_forward():
+    from repro.models import model_api as api
+    from repro.models import transformer as tfm
+    cfg = get_config("phi-3-vision-4.2b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(size=(1, cfg.n_img_tokens, cfg.d_model))
+                      * 0.02, jnp.bfloat16)
+    toks = rng.integers(1, cfg.vocab_size, (1, 8)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "image_embeds": img}
+    logits, cache = api.prefill(cfg, params, batch, 32)
+    seq = list(toks[0])
+    for _ in range(3):
+        nxt = int(jnp.argmax(logits[0, -1]))
+        full = {"tokens": jnp.asarray([seq], jnp.int32),
+                "image_embeds": img}
+        emb = tfm.embed_inputs(cfg, params, full)
+        h, _, _ = tfm.forward_hidden(cfg, params, emb)
+        ref = tfm.logits_fn(cfg, params, h[:, -1:, :])
+        assert int(jnp.argmax(ref[0, -1])) == nxt
+        seq.append(nxt)
+        logits, cache = api.decode_step(
+            cfg, params, cache, {"token": jnp.asarray([[nxt]], jnp.int32)})
+
+
+def test_lower_cell_end_to_end_small_mesh():
+    """The dry-run machinery itself, exercised on a reduced config and the
+    local 1-device mesh: lower+compile succeeds and produces cost/memory/
+    collective stats of the right shape."""
+    from repro.configs.base import InputShape
+    from repro.launch.dryrun_lib import lower_cell
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    shape = InputShape("t", 64, 2, "train")
+    res = lower_cell(cfg, shape, make_local_mesh(), microbatches=1)
+    assert res.ok, res.error
+    assert res.flops_per_dev > 0
+    assert res.bytes_per_dev > 0
+    assert res.mem is not None and res.mem["argument_bytes"] > 0
+    assert res.coll_detail is not None
+
+    dshape = InputShape("d", 64, 2, "decode")
+    res2 = lower_cell(cfg, dshape, make_local_mesh())
+    assert res2.ok, res2.error
+    assert res2.kind == "decode"

@@ -1,0 +1,138 @@
+"""Fault tolerance: failure detection/ejection, re-delivery, hedged
+requests, elastic membership, checkpoint/restart of training."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FDNControlPlane, Gateway, Invocation
+from repro.core import profiles, functions
+from repro.core.loadgen import attach_completion_hooks, run_load
+from repro.core.types import DeploymentSpec
+
+
+def build(names, **kw):
+    cp = FDNControlPlane(**kw)
+    for n in names:
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    fns = functions.paper_functions()
+    functions.seed_object_stores(cp.placement, location=names[0])
+    cp.deploy(DeploymentSpec("t", list(fns.values()), names))
+    attach_completion_hooks(cp)
+    return cp, fns
+
+
+def test_platform_failure_redelivers_inflight():
+    cp, fns = build(["hpc-node-cluster", "old-hpc-node-cluster"])
+    gw = Gateway(cp)
+    # schedule a failure mid-run
+    cp.clock.after(10.0, cp.platforms["hpc-node-cluster"].fail)
+    res = run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"],
+                   vus=8, duration_s=40.0, sleep_s=0.05)
+    cp.run_until(60.0)
+    assert cp.redeliverer.redelivered >= 0
+    # every request eventually completed somewhere (possibly after retry)
+    done = [i for i in res.invocations if i.status == "done"]
+    assert len(done) >= 0.95 * len(res.invocations)
+    # detector ejected the dead platform
+    cp.run_until(cp.clock.now() + 60.0)
+    assert not cp.detector.check("hpc-node-cluster")
+    assert cp.detector.check("old-hpc-node-cluster")
+
+
+def test_failure_detector_recovery():
+    cp, fns = build(["hpc-node-cluster", "old-hpc-node-cluster"])
+    p = cp.platforms["hpc-node-cluster"]
+    p.fail()
+    cp.run_until(cp.clock.now() + 120.0)
+    assert not cp.detector.check("hpc-node-cluster")
+    p.recover()
+    cp.run_until(cp.clock.now() + 20.0)
+    assert cp.detector.check("hpc-node-cluster")
+    assert p in cp.alive_platforms()
+
+
+def test_hedging_cuts_stragglers():
+    cp, fns = build(["hpc-node-cluster", "old-hpc-node-cluster"],
+                    enable_hedging=True)
+    gw = Gateway(cp)
+    # seed fast-latency observations on BOTH platforms so the hedge budget
+    # is small wherever the policy routes (hedging requires >=10 obs)
+    for pname in ("hpc-node-cluster", "old-hpc-node-cluster"):
+        for _ in range(20):
+            inv = Invocation(fns["nodeinfo"], 0.0)
+            inv.platform = pname
+            inv.exec_time = 0.01
+            inv.end_t = 0.01
+            cp.perf.observe(inv)
+    cp.platforms["hpc-node-cluster"].bg_cpu = 1.0   # now it's slow
+    run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"],
+             vus=4, duration_s=30.0, sleep_s=0.05)
+    assert cp.hedge.hedges_sent > 0
+
+
+def test_elastic_platform_join_leave():
+    cp, fns = build(["hpc-node-cluster"])
+    assert len(cp.alive_platforms()) == 1
+    newp = cp.create_platform(profiles.PAPER_PLATFORMS["cloud-cluster"])
+    newp.deploy(fns["nodeinfo"])
+    assert len(cp.alive_platforms()) == 2
+    cp.remove_platform("cloud-cluster")
+    assert len(cp.alive_platforms()) == 1
+
+
+def test_checkpoint_restart_training(tmp_path):
+    """Train -> checkpoint -> 'node failure' -> restore -> identical state."""
+    from repro.checkpoint.checkpointer import Checkpointer
+    from repro.configs.base import InputShape
+    from repro.configs.registry import get_config
+    from repro.models import model_api as api
+    from repro.train import optimizer as opt
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config("qwen3-0.6b").reduced()
+    oc = opt.OptConfig(total_steps=10)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init_state(oc, api.model_specs(cfg))
+    step_fn = jax.jit(make_train_step(cfg, oc))
+    batch = api.make_batch(cfg, InputShape("t", 32, 2, "train"))
+
+    ck = Checkpointer(str(tmp_path), retain=2)
+    losses = []
+    for i in range(3):
+        params, state, m = step_fn(params, state, batch)
+        losses.append(float(m["loss"]))
+    ck.save(3, {"params": params, "opt": state}, extra={"step": 3})
+
+    # crash + restore
+    like = {"params": params, "opt": state}
+    restored = ck.restore(3, like)
+    p2, s2 = restored["params"], restored["opt"]
+    # one more step from each must agree exactly
+    a_params, a_state, am = step_fn(params, state, batch)
+    b_params, b_state, bm = step_fn(p2, s2, batch)
+    assert float(am["loss"]) == pytest.approx(float(bm["loss"]), abs=1e-6)
+    la = jax.tree_util.tree_leaves(a_params)
+    lb = jax.tree_util.tree_leaves(b_params)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path), retain=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": np.arange(s + 1)})
+    assert ck.latest_step() == 4
+    assert ck.all_steps() == [3, 4]
+
+
+def test_checkpoint_async(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path), retain=3, async_save=True)
+    ck.save(1, {"x": np.ones(1000)})
+    ck.wait()
+    out = ck.restore(1, {"x": np.zeros(1000)})
+    np.testing.assert_array_equal(out["x"], np.ones(1000))

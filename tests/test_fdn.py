@@ -1,0 +1,169 @@
+"""FDN core behaviour: scheduling policies, hierarchical decisions,
+interference, collaboration, data locality, energy, monitoring."""
+import pytest
+
+from repro.core import (FDNControlPlane, Gateway, Invocation,
+                        PerformanceRankedPolicy, UtilizationAwarePolicy,
+                        RoundRobinCollaboration, WeightedCollaboration,
+                        EnergyAwarePolicy, DataLocalityPolicy,
+                        SLOCompositePolicy)
+from repro.core import profiles, functions
+from repro.core.loadgen import attach_completion_hooks, run_load, \
+    run_open_loop
+from repro.core.types import DeploymentSpec, FunctionSpec, SLO
+
+
+def build(policy=None, names=None):
+    cp = FDNControlPlane(policy=policy)
+    for n in (names or list(profiles.PAPER_PLATFORMS)):
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    fns = functions.paper_functions()
+    functions.seed_object_stores(cp.placement, location="cloud-cluster")
+    cp.deploy(DeploymentSpec("t", list(fns.values()),
+                             list(cp.platforms)))
+    attach_completion_hooks(cp)
+    return cp, fns
+
+
+def test_performance_ranked_picks_fastest():
+    cp, fns = build()
+    pol = PerformanceRankedPolicy(cp.perf)
+    inv = Invocation(fns["primes-python"], 0.0)
+    chosen = pol.choose(inv, list(cp.platforms.values()))
+    assert chosen.prof.name == "hpc-node-cluster"
+
+
+def test_utilization_aware_avoids_loaded_platform():
+    cp, fns = build(names=["hpc-node-cluster", "old-hpc-node-cluster"])
+    pol = UtilizationAwarePolicy(cp.perf, cpu_threshold=0.5)
+    cp.platforms["hpc-node-cluster"].bg_cpu = 0.9
+    inv = Invocation(fns["primes-python"], 0.0)
+    chosen = pol.choose(inv, list(cp.platforms.values()))
+    assert chosen.prof.name == "old-hpc-node-cluster"
+
+
+def test_round_robin_alternates():
+    cp, fns = build(names=["hpc-node-cluster", "cloud-cluster"])
+    pol = RoundRobinCollaboration()
+    inv = Invocation(fns["nodeinfo"], 0.0)
+    seq = [pol.choose(inv, list(cp.platforms.values())).prof.name
+           for _ in range(4)]
+    assert seq[0] != seq[1] and seq[0] == seq[2]
+
+
+def test_weighted_ratio():
+    cp, fns = build(names=["hpc-node-cluster", "cloud-cluster"])
+    pol = WeightedCollaboration({"hpc-node-cluster": 5, "cloud-cluster": 1})
+    inv = Invocation(fns["nodeinfo"], 0.0)
+    seq = [pol.choose(inv, list(cp.platforms.values())).prof.name
+           for _ in range(12)]
+    assert seq.count("hpc-node-cluster") == 10
+    assert seq.count("cloud-cluster") == 2
+
+
+def test_energy_aware_prefers_edge_for_light_fn():
+    cp, fns = build()
+    pol = EnergyAwarePolicy(cp.perf)
+    light = fns["JSON-loads"].replace(slo=SLO(p90_response_s=7.0))
+    chosen = pol.choose(Invocation(light, 0.0),
+                        list(cp.platforms.values()))
+    assert chosen.prof.name == "edge-cluster"
+
+
+def test_energy_aware_respects_slo():
+    """With a tight SLO the slow edge platform must NOT be chosen."""
+    cp, fns = build()
+    # teach the model that edge is slow
+    for _ in range(12):
+        inv = Invocation(fns["primes-python"], 0.0)
+        inv.platform = "edge-cluster"
+        inv.exec_time = 5.0
+        inv.end_t = 5.0
+        cp.perf.observe(inv)
+    pol = EnergyAwarePolicy(cp.perf)
+    # SLO that the fast platforms can meet but edge's observed 5 s cannot
+    strict = fns["primes-python"].replace(slo=SLO(p90_response_s=2.0))
+    chosen = pol.choose(Invocation(strict, 0.0),
+                        list(cp.platforms.values()))
+    assert chosen.prof.name != "edge-cluster"
+
+
+def test_data_locality_prefers_platform_near_data():
+    cp, fns = build()
+    pol = DataLocalityPolicy(cp.perf, cp.placement)
+    # big object lives only on old-hpc; WAN to everyone else
+    cp.placement.stores["old-hpc-node-cluster"].put("blob", 5e9)
+    for other in cp.platforms:
+        if other != "old-hpc-node-cluster":
+            cp.placement.set_bandwidth(other, "old-hpc-node-cluster", 1e6)
+    fn = fns["image-processing"].replace(data_objects=("blob",))
+    chosen = pol.choose(Invocation(fn, 0.0), list(cp.platforms.values()))
+    assert chosen.prof.name == "old-hpc-node-cluster"
+
+
+def test_composite_policy_full_pipeline():
+    cp, fns = build(policy=None)
+    gw = Gateway(cp)
+    res = run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"],
+                   vus=10, duration_s=30.0, sleep_s=0.05)
+    assert len(res.completed) > 100
+    assert len(cp.rejected) == 0
+    assert len(cp.kb.decisions) == len(res.invocations)
+
+
+def test_gateway_access_control():
+    cp, fns = build()
+    gw = Gateway(cp)
+    inv = Invocation(fns["nodeinfo"], 0.0)
+    assert not gw.request(inv, principal="intruder", token="nope")
+    assert gw.unauthorized == 1
+
+
+def test_sidecar_delegates_under_pressure():
+    cp, fns = build(names=["hpc-node-cluster", "cloud-cluster"])
+    sc = cp.sidecars["cloud-cluster"]
+    cp.platforms["cloud-cluster"].bg_cpu = 1.0
+    delegated = []
+    inv = Invocation(fns["nodeinfo"], 0.0)
+    sc.handle_local_trigger(inv, delegate=delegated.append)
+    assert delegated, "sidecar should delegate when pressured"
+
+
+def test_open_loop_energy_ratio_table4():
+    """Condensed Table-4: >=8x CPU energy saving edge vs hpc at equal load."""
+    joules = {}
+    for pname in ("edge-cluster", "hpc-node-cluster"):
+        cp, fns = build(names=[pname])
+        res = run_open_loop(
+            cp.clock, lambda i: cp.submit(i, platform_override=pname),
+            fns["JSON-loads"], rps=40.0, duration_s=120.0)
+        cp.run_until(cp.clock.now())
+        assert len(res.completed) >= 0.95 * 40 * 120, pname
+        assert res.p90_response() <= 7.0, pname
+        joules[pname] = cp.energy.joules(pname)
+    assert joules["hpc-node-cluster"] / joules["edge-cluster"] >= 8.0
+
+
+def test_interference_cpu_and_memory():
+    from repro.core.platform import Replica
+    cp, fns = build(names=["old-hpc-node-cluster"])
+    p = cp.platforms["old-hpc-node-cluster"]
+    assert p._interference_factor() == 1.0
+    # one running replica while the background load owns every core
+    rep = Replica("nodeinfo")
+    rep.busy = True
+    p.replicas["nodeinfo"].append(rep)
+    p.bg_cpu = 1.0
+    assert p._interference_factor() == pytest.approx(2.0)
+    p.bg_cpu = 0.5                       # fits on the free half -> no effect
+    assert p._interference_factor() == 1.0
+    p.bg_cpu = 0.0
+    p.bg_mem = 1.01
+    assert p._interference_factor() >= 7.0
+
+
+def test_arm_platform_rejects_x86_images():
+    cp, fns = build(names=["edge-cluster"])
+    bad = FunctionSpec(name="x86-only", runtime="docker-x86")
+    with pytest.raises(ValueError):
+        cp.platforms["edge-cluster"].deploy(bad)

@@ -1,0 +1,156 @@
+"""§Perf variants must be numerically equivalent to the baselines:
+sorted / shard_map MoE dispatch vs one-hot einsum, shard_mapped flash
+decode vs the GSPMD decode path, and kv-sliced chunked attention vs the
+full-mask oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AxisType
+
+from repro import sharding as shd
+from repro.configs.registry import get_config
+from repro.models import model_api as api
+from repro.models import moe
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="module")
+def mixtral():
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    layer0 = jax.tree_util.tree_map(lambda a: a[0], params["layers"])["moe"]
+    return cfg, layer0
+
+
+@pytest.mark.parametrize("cf", [8.0, 0.6])     # without and with drops
+def test_moe_sorted_matches_einsum(mixtral, cf):
+    cfg, p = mixtral
+    cfg = cfg.replace(capacity_factor=cf)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.1,
+                    jnp.bfloat16)
+    y1, a1 = moe.moe_block(cfg, p, x)
+    y2, a2 = moe.moe_block(cfg.replace(moe_impl="sorted"), p, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=1e-3)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-5)
+
+
+def test_moe_shard_map_matches_einsum(mixtral):
+    cfg, p = mixtral
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.1,
+                    jnp.bfloat16)
+    y1, a1 = moe.moe_block(cfg, p, x)
+    with shd.use_mesh(_mesh11()):
+        y2, a2 = jax.jit(lambda p, x: moe.moe_block(
+            cfg.replace(moe_impl="sorted_shmap"), p, x))(p, x)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=1e-3)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-4)
+
+
+def test_moe_loss_with_shmap_variant():
+    """Full train loss through the shard_map MoE path (grad-able)."""
+    from repro.configs.base import InputShape
+    cfg = get_config("mixtral-8x7b").reduced().replace(
+        moe_impl="sorted_shmap")
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = api.make_batch(cfg, InputShape("t", 32, 2, "train"))
+    with shd.use_mesh(_mesh11()):
+        loss, _ = jax.jit(
+            lambda p, b: api.loss_fn(cfg, p, b, remat=False))(params, batch)
+    ref, _ = api.loss_fn(cfg.replace(moe_impl="einsum"), params, batch,
+                         remat=False)
+    assert float(loss) == pytest.approx(float(ref), rel=5e-3)
+
+
+def test_shmap_flash_decode_matches_gspmd():
+    cfg = get_config("qwen3-0.6b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = rng.integers(1, cfg.vocab_size, (2, 16)).astype(np.int32)
+    logits, cache = api.prefill(cfg, params, {"tokens": jnp.asarray(toks)},
+                                30)
+    db = {"token": jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 1)),
+                               jnp.int32)}
+    mesh = _mesh11()
+    with shd.use_mesh(mesh):
+        l1, c1 = jax.jit(lambda p, c, b: api.decode_step(cfg, p, c, b))(
+            params, cache, db)
+        cfg2 = cfg.replace(decode_impl="shmap_flash")
+        l2, c2 = jax.jit(lambda p, c, b: api.decode_step(cfg2, p, c, b))(
+            params, cache, db)
+    # bf16 1-ulp differences from different fusion/rounding are expected
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=5e-2,
+                               rtol=5e-2)
+    assert int(jnp.argmax(l1[0, -1])) == int(jnp.argmax(l2[0, -1]))
+    np.testing.assert_allclose(np.asarray(c1["k"], np.float32),
+                               np.asarray(c2["k"], np.float32), atol=5e-2)
+    np.testing.assert_array_equal(np.asarray(c1["pos"]),
+                                  np.asarray(c2["pos"]))
+
+
+def test_chunked_attention_kv_slicing_variants():
+    """SWA dynamic-slice path and causal unrolled path vs the oracle."""
+    from repro.kernels import ref
+    from repro.models.layers import chunked_attention
+    rng = np.random.default_rng(0)
+
+    def arr(*s):
+        return jnp.asarray(rng.normal(size=s) * 0.3, jnp.float32)
+
+    q, k, v = arr(2, 256, 4, 32), arr(2, 256, 2, 32), arr(2, 256, 2, 32)
+    for window in (None, 48, 100, 1000):
+        out = chunked_attention(q, k, v, q_chunk=64, window=window)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=3e-5, err_msg=f"window={window}")
+
+
+def test_yi_head_padding_is_function_preserving():
+    """Zero-padding attention heads (56->64 at pod scale; 4->6 here) with
+    zero wo rows must not change the model function."""
+    cfg = get_config("yi-34b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    cfg_pad = cfg.replace(n_heads=6)
+    l, d, dh = cfg.num_layers, cfg.d_model, cfg.head_dim
+    kh = cfg.n_kv_heads
+    g, g_pad = cfg.n_heads // kh, cfg_pad.n_heads // kh
+
+    # GQA groups must keep their kv assignment: pad WITHIN each kv group
+    def pad_wq(arr):                        # (L, D, H*Dh)
+        a = arr.reshape(l, d, kh, g, dh)
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+        return a.reshape(l, d, kh * g_pad * dh)
+
+    def pad_wo(arr):                        # (L, H*Dh, D)
+        a = arr.reshape(l, kh, g, dh, d)
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, g_pad - g), (0, 0), (0, 0)))
+        return a.reshape(l, kh * g_pad * dh, d)
+
+    layers = dict(params["layers"])
+    attn = dict(layers["attn"])
+    attn["wq"] = pad_wq(attn["wq"])
+    attn["wo"] = pad_wo(attn["wo"])
+    layers["attn"] = attn
+    pad_params = dict(params)
+    pad_params["layers"] = layers
+
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 32)), jnp.int32)
+    from repro.models import transformer as tfm
+    h1, _, _ = tfm.forward_hidden(cfg, params,
+                                  tfm.embed_inputs(cfg, params,
+                                                   {"tokens": toks}))
+    h2, _, _ = tfm.forward_hidden(cfg_pad, pad_params,
+                                  tfm.embed_inputs(cfg_pad, pad_params,
+                                                   {"tokens": toks}))
+    np.testing.assert_allclose(np.asarray(h1, np.float32),
+                               np.asarray(h2, np.float32), atol=2e-2)

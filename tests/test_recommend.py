@@ -1,0 +1,76 @@
+"""Recommendation & Visualization (§3.6) + bursty workload generator."""
+import numpy as np
+
+from repro.core import FDNControlPlane, Gateway
+from repro.core import functions as fn_mod
+from repro.core import profiles
+from repro.core.loadgen import attach_completion_hooks, run_load
+from repro.core.recommend import Recommender
+from repro.core.types import DeploymentSpec
+
+
+def _loaded_cp():
+    cp = FDNControlPlane()
+    for n in ("hpc-node-cluster", "edge-cluster"):
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    fns = fn_mod.paper_functions()
+    fn_mod.seed_object_stores(cp.placement, location="hpc-node-cluster")
+    cp.deploy(DeploymentSpec("t", list(fns.values()), list(cp.platforms)))
+    attach_completion_hooks(cp)
+    gw = Gateway(cp)
+    run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"], vus=5,
+             duration_s=20.0, sleep_s=0.05)
+    return cp, fns
+
+
+def test_recommend_tradeoff_and_history():
+    cp, fns = _loaded_cp()
+    rec = Recommender(cp.kb, cp.perf, cp.metrics)
+    profs = [p.prof for p in cp.platforms.values()]
+    advice = rec.recommend(fns["JSON-loads"], profs)
+    assert advice["latency_best"] == "hpc-node-cluster"
+    assert advice["energy_best"] == "edge-cluster"
+    assert advice["tradeoff"] is True
+    advice2 = rec.recommend(fns["nodeinfo"], profs)
+    assert advice2["historical"] in cp.platforms
+
+
+def test_recommend_rejects_nonfitting():
+    cp, fns = _loaded_cp()
+    rec = Recommender(cp.kb, cp.perf, cp.metrics)
+    big = fns["nodeinfo"].replace(name="huge", memory_mb=1 << 30)
+    advice = rec.recommend(big, [p.prof for p in cp.platforms.values()])
+    assert advice.get("error") == "fits nowhere"
+
+
+def test_explain_decisions_renders_markdown():
+    cp, fns = _loaded_cp()
+    rec = Recommender(cp.kb, cp.perf, cp.metrics)
+    md = rec.explain_decisions()
+    assert "| function | platform | share |" in md
+    assert "nodeinfo" in md
+    report = rec.platform_report(list(cp.platforms))
+    assert "served=" in report
+
+
+def test_bursty_arrivals_shape():
+    from repro.data.pipeline import bursty_arrival_times
+    t = bursty_arrival_times(rate=10.0, duration_s=120.0,
+                             burst_factor=4.0, period_s=30.0)
+    assert np.all(np.diff(t) >= 0)
+    assert 0 <= t.min() and t.max() <= 120.0
+    # average rate between base and peak
+    avg = len(t) / 120.0
+    assert 10.0 * 0.8 <= avg <= 40.0
+    # bursts exist: windowed rates vary by >1.5x
+    hist, _ = np.histogram(t, bins=24)
+    assert hist.max() >= 1.5 * max(hist.min(), 1)
+
+
+def test_event_model_tracks_bursts():
+    from repro.core.behavioral import EventModel
+    from repro.data.pipeline import bursty_arrival_times
+    em = EventModel(window_s=10.0)
+    for t in bursty_arrival_times(20.0, 300.0, period_s=100.0):
+        em.record("f", float(t))
+    assert em.forecast_rate("f") > 0.0

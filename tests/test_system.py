@@ -1,0 +1,161 @@
+"""End-to-end behaviour tests for the full system: real training runs with
+loss decrease, the FDN serving pipeline over heterogeneous platforms, and
+policy-vs-policy outcome comparisons (the paper's headline results in
+miniature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import InputShape
+from repro.configs.registry import get_config
+from repro.models import model_api as api
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def test_training_loss_decreases():
+    """~40 steps of real training on CPU must reduce the LM loss."""
+    from repro.data.pipeline import DataConfig, TokenStream
+    cfg = get_config("qwen3-0.6b").reduced()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                    seed=3, mean_doc_len=16)
+    stream = TokenStream(dc)
+    oc = opt.OptConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    state = opt.init_state(oc, api.model_specs(cfg))
+    step = jax.jit(make_train_step(cfg, oc))
+    losses = []
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.3, (first, last)
+    assert np.isfinite(losses).all()
+
+
+def test_training_with_microbatches_matches_single():
+    """Grad accumulation must match the single-batch step (same arithmetic)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    oc = opt.OptConfig(lr=1e-3, warmup_steps=0)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = api.make_batch(cfg, InputShape("t", 32, 4, "train"))
+    s1 = opt.init_state(oc, api.model_specs(cfg))
+    s2 = opt.init_state(oc, api.model_specs(cfg))
+    p1, _, m1 = jax.jit(make_train_step(cfg, oc, 1))(params, s1, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, oc, 2))(params, s2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=2e-2)
+    l1 = jax.tree_util.tree_leaves(p1)
+    l2 = jax.tree_util.tree_leaves(p2)
+    for a, b in zip(l1, l2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_fdn_serves_ml_functions_across_platforms():
+    """The FDN delivers serve-<arch> functions; energy-aware routing sends
+    small models to the edge pod, big models to the big pod."""
+    from repro.core import EnergyAwarePolicy, FDNControlPlane, Gateway
+    from repro.core import functions as fn_mod
+    from repro.core import profiles
+    from repro.core.loadgen import attach_completion_hooks, run_load
+    from repro.core.types import DeploymentSpec, SLO
+
+    cp = FDNControlPlane()
+    for name in ("hpc-pod", "edge-tpu"):
+        cp.create_platform(profiles.TPU_PLATFORMS[name])
+    small = fn_mod.serving_function("qwen3-0.6b").replace(slo=SLO(5.0))
+    big = fn_mod.serving_function("llama3-405b").replace(slo=SLO(5.0))
+    cp.deploy(DeploymentSpec("serve", [small, big],
+                             ["hpc-pod", "edge-tpu"]))
+    attach_completion_hooks(cp)
+    cp.policy = EnergyAwarePolicy(cp.perf)
+    gw = Gateway(cp)
+    run_load(cp.clock, lambda i: gw.request(i), small, vus=4,
+             duration_s=30.0, sleep_s=0.1)
+    run_load(cp.clock, lambda i: gw.request(i), big, vus=4,
+             duration_s=30.0, sleep_s=0.1)
+    small_on_edge = cp.metrics.requests_served("edge-tpu", small.name)
+    big_on_hpc = cp.metrics.requests_served("hpc-pod", big.name)
+    assert small_on_edge > 0, "small model should run on the edge pod"
+    assert big_on_hpc > 0, "large model should run on the big pod"
+
+
+def test_composite_beats_static_worst_platform():
+    """The FDN composite policy must beat always-picking the edge platform
+    for a compute-heavy function (the paper's core value proposition)."""
+    from repro.core import FDNControlPlane, Gateway
+    from repro.core import functions as fn_mod
+    from repro.core import profiles
+    from repro.core.loadgen import attach_completion_hooks, run_load
+    from repro.core.types import DeploymentSpec
+
+    def run(force_edge):
+        cp = FDNControlPlane()
+        for n in ("hpc-node-cluster", "edge-cluster"):
+            cp.create_platform(profiles.PAPER_PLATFORMS[n])
+        fns = fn_mod.paper_functions()
+        fn_mod.seed_object_stores(cp.placement,
+                                  location="hpc-node-cluster")
+        cp.deploy(DeploymentSpec("t", list(fns.values()),
+                                 list(cp.platforms)))
+        attach_completion_hooks(cp)
+        gw = Gateway(cp)
+        if force_edge:
+            submit = lambda i: cp.submit(i, platform_override="edge-cluster")
+        else:
+            submit = lambda i: gw.request(i)
+        res = run_load(cp.clock, submit, fns["primes-python"], vus=10,
+                       duration_s=40.0, sleep_s=0.1)
+        return res.p90_response()
+
+    p90_fdn = run(False)
+    p90_edge = run(True)
+    assert p90_fdn < p90_edge, (p90_fdn, p90_edge)
+
+
+def test_scale_to_zero_reclaims_replicas():
+    from repro.core import FDNControlPlane, Gateway
+    from repro.core import functions as fn_mod
+    from repro.core import profiles
+    from repro.core.loadgen import attach_completion_hooks, run_load
+    from repro.core.types import DeploymentSpec
+
+    cp = FDNControlPlane()
+    cp.create_platform(profiles.PAPER_PLATFORMS["cloud-cluster"])
+    fns = fn_mod.paper_functions()
+    fn_mod.seed_object_stores(cp.placement, location="cloud-cluster")
+    cp.deploy(DeploymentSpec("t", list(fns.values()), ["cloud-cluster"]))
+    attach_completion_hooks(cp)
+    gw = Gateway(cp)
+    run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"], vus=5,
+             duration_s=20.0, sleep_s=0.05)
+    p = cp.platforms["cloud-cluster"]
+    assert p.replica_count("nodeinfo") > 0
+    # idle long past the faas-idler window
+    cp.run_until(cp.clock.now() + 3 * p.prof.scale_to_zero_s)
+    assert p.replica_count("nodeinfo") <= p.prof.prewarm_pool + 1
+
+
+def test_predictive_prewarm_reduces_cold_starts():
+    from repro.core import FDNControlPlane, Gateway
+    from repro.core import functions as fn_mod
+    from repro.core import profiles
+    from repro.core.loadgen import attach_completion_hooks, run_load
+    from repro.core.types import DeploymentSpec
+
+    def run(prewarm):
+        cp = FDNControlPlane(predictive_prewarm=prewarm)
+        cp.create_platform(profiles.PAPER_PLATFORMS["cloud-cluster"])
+        fns = fn_mod.paper_functions()
+        fn_mod.seed_object_stores(cp.placement, location="cloud-cluster")
+        cp.deploy(DeploymentSpec("t", list(fns.values()),
+                                 ["cloud-cluster"]))
+        attach_completion_hooks(cp)
+        gw = Gateway(cp)
+        run_load(cp.clock, lambda i: gw.request(i), fns["nodeinfo"],
+                 vus=12, duration_s=60.0, sleep_s=0.05)
+        return cp.metrics.total("cloud-cluster", "nodeinfo", "cold_starts")
+
+    assert run(True) <= run(False)

@@ -1,0 +1,69 @@
+"""Threshold Tuning (§3.6) and function composition (§6.3)."""
+import pytest
+
+from repro.core import (FDNControlPlane, Gateway, SLOCompositePolicy)
+from repro.core import functions as fn_mod
+from repro.core import profiles
+from repro.core.behavioral import InteractionModel
+from repro.core.loadgen import attach_completion_hooks, run_load
+from repro.core.tuning import (ThresholdTuner, compose_functions,
+                               composition_plan)
+from repro.core.types import DeploymentSpec, FunctionSpec, SLO
+
+
+def _evaluate(thresholds):
+    """One short FDNInspector replay; score = SLO-met fraction."""
+    cp = FDNControlPlane()
+    for n in ("hpc-node-cluster", "cloud-cluster", "edge-cluster"):
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    fns = fn_mod.paper_functions()
+    fn_mod.seed_object_stores(cp.placement, location="hpc-node-cluster")
+    cp.deploy(DeploymentSpec("t", list(fns.values()), list(cp.platforms)))
+    attach_completion_hooks(cp)
+    cp.policy = SLOCompositePolicy(cp.perf, cp.placement, **thresholds)
+    gw = Gateway(cp)
+    res = run_load(cp.clock, lambda i: gw.request(i),
+                   fns["primes-python"], vus=10, duration_s=20.0,
+                   sleep_s=0.1)
+    done = res.completed
+    if not done:
+        return 0.0
+    met = sum(1 for i in done
+              if i.response_time <= i.fn.slo.p90_response_s)
+    return met / len(done)
+
+
+def test_threshold_tuner_finds_best_setting():
+    tuner = ThresholdTuner(grid={"cpu_threshold": (0.5, 0.9),
+                                 "energy_weight": (0.0, 0.5)})
+    result = tuner.tune(_evaluate)
+    assert len(result.trials) == 4
+    assert result.best in [t[0] for t in result.trials]
+    assert result.score == max(s for _, s in result.trials)
+    assert 0.0 <= result.score <= 1.0
+
+
+def test_compose_functions_removes_internal_io():
+    a = FunctionSpec(name="a", flops=1e6, read_bytes=100.0,
+                     write_bytes=500.0, memory_mb=128, slo=SLO(5.0))
+    b = FunctionSpec(name="b", flops=2e6, read_bytes=500.0,
+                     write_bytes=50.0, memory_mb=256, slo=SLO(3.0))
+    c = compose_functions(a, b)
+    assert c.name == "a+b"
+    assert c.flops == 3e6
+    assert c.read_bytes == 100.0          # b's read of a's output is free
+    assert c.write_bytes == 50.0
+    assert c.memory_mb == 256
+    assert c.slo.p90_response_s == 3.0
+
+
+def test_composition_plan_from_interaction_model():
+    im = InteractionModel(window_s=1.0)
+    t = 0.0
+    for _ in range(12):
+        im.record("a", t)
+        im.record("b", t + 0.1)
+        t += 10.0
+    fns = {"a": FunctionSpec(name="a"), "b": FunctionSpec(name="b")}
+    plan = composition_plan(im, fns, min_count=10)
+    assert [f.name for f in plan] == ["a+b"]
