@@ -24,13 +24,19 @@ REMOTE_STORE = "gcp-us-east"
 
 
 def build_fdn(policy=None, platforms: Optional[List[str]] = None,
-              data_location: str = "cloud-cluster") -> Tuple[
+              data_location: str = "cloud-cluster",
+              analytic: bool = False) -> Tuple[
                   FDNControlPlane, Gateway, Dict]:
+    """``analytic=True`` strips the real JAX callables so execution cost
+    comes from the analytic model only — scheduler-focused benchmarks must
+    not fold one-off JIT compilation into their measurement."""
     cp = FDNControlPlane(policy=policy)
     names = platforms or list(prof_mod.PAPER_PLATFORMS)
     for name in names:
         cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
     fns = fn_mod.paper_functions(IMAGE_KEY, JSON_KEY)
+    if analytic:
+        fns = {k: f.replace(real_fn=None) for k, f in fns.items()}
     fn_mod.seed_object_stores(cp.placement, IMAGE_KEY, JSON_KEY,
                               location=data_location)
     # remote MinIO instance on GCP us-east (Fig. 11)

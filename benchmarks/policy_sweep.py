@@ -16,9 +16,11 @@ from benchmarks.fdn_common import Row, build_fdn, check
 from repro.core import (EnergyAwarePolicy, PerformanceRankedPolicy,
                         RoundRobinCollaboration, SLOCompositePolicy,
                         UtilizationAwarePolicy)
-from repro.core.loadgen import run_load
+from repro.core.loadgen import (ColumnarResultSink, poisson_arrivals,
+                                run_arrivals, run_load)
 
 DURATION = 90.0
+OPEN_LOOP_RPS = 60.0
 
 
 def _run(policy_name: str):
@@ -69,6 +71,25 @@ def run_bench() -> Tuple[List[Row], List[str]]:
           "energy-aware should burn less than perf-ranked", failures)
     check(stats["perf_ranked"]["p90"] <= stats["round_robin"]["p90"],
           "perf-ranked should have lower P90 than round-robin", failures)
+
+    # open-loop Poisson arrivals through the batched gateway path: the
+    # composite policy must hold the SLO under burst admission too
+    cp, gw, fns = build_fdn()
+    sink = ColumnarResultSink().install(cp)
+    arrivals = poisson_arrivals(OPEN_LOOP_RPS, DURATION, seed=11)
+    run_arrivals(cp.clock, gw.request_batch, fns["nodeinfo"], arrivals,
+                 batch_window_s=0.1, sink=sink)
+    rows.append(Row("policy_sweep/slo_composite_open_loop",
+                    sink.mean_response() * 1e6,
+                    f"p90_s={sink.p90_response():.3f};"
+                    f"rps={sink.requests_per_s(DURATION):.1f};"
+                    f"n={sink.completed};rejected={sink.rejected}"))
+    check(sink.rejected == 0,
+          "open-loop batched path should admit every arrival", failures)
+    check(sink.completed == arrivals.size,
+          "open-loop batched path should complete every arrival", failures)
+    check(sink.p90_response() <= fns["nodeinfo"].slo.p90_response_s,
+          "open-loop batched path should meet the nodeinfo SLO", failures)
     return rows, failures
 
 

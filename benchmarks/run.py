@@ -25,6 +25,7 @@ BENCHES = [
     "fig11_data_locality",
     "table4_energy",
     "policy_sweep",
+    "bench_sched_throughput",
 ]
 
 

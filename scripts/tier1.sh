@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite plus a smoke pass of the
+# scheduler-throughput benchmark (catches batched-path regressions that
+# unit tests alone would miss).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q
+
+PYTHONPATH="src:." python benchmarks/bench_sched_throughput.py --smoke

@@ -112,8 +112,16 @@ class EventModel:
         self._last_w: Dict[str, int] = {}
 
     def record(self, fn: str, t: float):
+        self.record_many(fn, t, 1)
+
+    def record_many(self, fn: str, t: float, count: int = 1):
+        """Fold ``count`` simultaneous arrivals (one batch) into the rate
+        model — equivalent to ``count`` calls to ``record(fn, t)`` but one
+        window update."""
+        if count <= 0:
+            return
         w = int(t // self.window_s)
-        self._counts[fn][w] += 1
+        self._counts[fn][w] += count
         lw = self._last_w.get(fn)
         if lw is None:
             self._last_w[fn] = w

@@ -8,7 +8,7 @@ locally -> completion feeds Monitoring + Behavioral models + KnowledgeBase.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.behavioral import (EventModel, FunctionPerformanceModel,
                                    InteractionModel)
@@ -127,10 +127,19 @@ class FDNControlPlane:
                 self.placement.stage_for(fn.name, stage, pref)
 
     # ------------------------------------------------------------ submit --
+    def _record_arrival(self, inv: Invocation, now: float):
+        """Arrival bookkeeping, exactly once per invocation: redelivery and
+        gateway fall-through must not double-count in the EventModel /
+        InteractionModel."""
+        if inv.arrival_recorded:
+            return
+        inv.arrival_recorded = True
+        self.events.record(inv.fn.name, now)
+        self.interactions.record(inv.fn.name, now)
+
     def submit(self, inv: Invocation,
                platform_override: Optional[str] = None) -> bool:
-        self.events.record(inv.fn.name, self.clock.now())
-        self.interactions.record(inv.fn.name, self.clock.now())
+        self._record_arrival(inv, self.clock.now())
         if self.predictive_prewarm:
             self._maybe_prewarm(inv.fn)
         if platform_override is not None:
@@ -145,10 +154,86 @@ class FDNControlPlane:
             self.clock.now(), inv.fn.name, target.prof.name,
             self.policy.name, self.perf.predict_exec(inv.fn, target.prof))
         self.sidecars[target.prof.name].admit(inv)
-        alternates = [p for p in self.alive_platforms() if p is not target]
-        self.hedge.watch(inv, target, alternates,
-                         lambda i, p: self.sidecars[p.prof.name].admit(i))
+        if self.hedge.enabled:
+            alternates = [p for p in self.alive_platforms()
+                          if p is not target]
+            self.hedge.watch(inv, target, alternates,
+                             lambda i, p: self.sidecars[p.prof.name].admit(i))
         return True
+
+    def submit_batch(self, invs: Sequence[Invocation],
+                     platform_override: Optional[str] = None) -> int:
+        """Admit a whole arrival batch in ONE policy evaluation.
+
+        The policy scores the batch against a single columnar platform
+        snapshot (scheduler.PlatformSnapshot), decisions are logged to the
+        knowledge base in bulk, and each target platform drains its queue
+        once per batch instead of once per invocation.  Returns the number
+        of accepted invocations; rejected ones land in ``self.rejected``.
+        """
+        if not invs:
+            return 0
+        now = self.clock.now()
+        # arrival bookkeeping (exactly once per invocation, rate-model
+        # counts folded per function)
+        fn_counts: Dict[str, int] = {}
+        seen_fns: Dict[str, FunctionSpec] = {}
+        for inv in invs:
+            name = inv.fn.name
+            seen_fns.setdefault(name, inv.fn)
+            if not inv.arrival_recorded:
+                inv.arrival_recorded = True
+                fn_counts[name] = fn_counts.get(name, 0) + 1
+                self.interactions.record(name, now)
+        for name, c in fn_counts.items():
+            self.events.record_many(name, now, c)
+        if self.predictive_prewarm:
+            for fn in seen_fns.values():
+                self._maybe_prewarm(fn)
+
+        alive = self.alive_platforms()
+        if platform_override is not None:
+            override = self.platforms.get(platform_override)
+            targets: List[Optional[TargetPlatform]] = [override] * len(invs)
+        else:
+            targets = self.policy.choose_batch(invs, alive)
+
+        accepted = 0
+        pname_groups: Dict[str, List[Invocation]] = {}
+        pred_cache: Dict[Tuple[str, str], float] = {}
+        rows: List[Dict] = []
+        policy_name = self.policy.name
+        for inv, target in zip(invs, targets):
+            if target is None:
+                inv.status = "failed"
+                self.rejected.append(inv)
+                continue
+            pname = target.prof.name
+            key = (inv.fn.name, pname)
+            pred = pred_cache.get(key)
+            if pred is None:
+                pred = self.perf.predict_exec(inv.fn, target.prof)
+                pred_cache[key] = pred
+            rows.append({"t": now, "fn": inv.fn.name, "platform": pname,
+                         "policy": policy_name, "predicted_s": pred})
+            group = pname_groups.get(pname)
+            if group is None:
+                pname_groups[pname] = [inv]
+            else:
+                group.append(inv)
+            accepted += 1
+        self.kb.record_decisions(rows)
+        for pname, group in pname_groups.items():
+            self.sidecars[pname].admit_many(group)
+        if self.hedge.enabled:
+            for inv, target in zip(invs, targets):
+                if target is None:
+                    continue
+                alternates = [p for p in alive if p is not target]
+                self.hedge.watch(
+                    inv, target, alternates,
+                    lambda i, p: self.sidecars[p.prof.name].admit(i))
+        return accepted
 
     # ---------------------------------------------------------- feedback --
     def _on_complete(self, inv: Invocation):

@@ -1,9 +1,15 @@
 """Gateway: the FDN's single point of entry (the NGINX analogue of
 §5.1.3), with access control and optional collaboration load-balancing in
-front of the control plane's scheduler."""
+front of the control plane's scheduler.
+
+``request`` resolves the load-balancer target first and then calls
+``cp.submit`` exactly once, so every invocation's arrival is recorded
+exactly once in the behavioral models.  ``request_batch`` is the burst
+path: one auth check and one policy evaluation for the whole batch.
+"""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.control_plane import FDNControlPlane
 from repro.core.scheduler import Policy
@@ -20,17 +26,51 @@ class Gateway:
         self.principal, self.token = principal, token
         self.unauthorized = 0
 
-    def request(self, inv: Invocation, principal: Optional[str] = None,
-                token: Optional[str] = None) -> bool:
+    def _authorized(self, principal: Optional[str],
+                    token: Optional[str]) -> bool:
         principal = principal if principal is not None else self.principal
         token = token if token is not None else self.token
-        if not self.cp.access.check(principal, token):
+        return self.cp.access.check(principal, token)
+
+    def request(self, inv: Invocation, principal: Optional[str] = None,
+                token: Optional[str] = None) -> bool:
+        if not self._authorized(principal, token):
             self.unauthorized += 1
             inv.status = "failed"
             return False
+        override = None
         if self.lb_policy is not None:
             target = self.lb_policy.choose(inv, self.cp.alive_platforms())
             if target is not None:
-                return self.cp.submit(inv,
-                                      platform_override=target.prof.name)
-        return self.cp.submit(inv)
+                override = target.prof.name
+        return self.cp.submit(inv, platform_override=override)
+
+    def request_batch(self, invs: Sequence[Invocation],
+                      principal: Optional[str] = None,
+                      token: Optional[str] = None) -> int:
+        """Admit a whole arrival burst: auth once, route once, submit in
+        per-platform groups.  Returns the number of accepted invocations."""
+        if not invs:
+            return 0
+        if not self._authorized(principal, token):
+            self.unauthorized += len(invs)
+            for inv in invs:
+                inv.status = "failed"
+            return 0
+        if self.lb_policy is None:
+            return self.cp.submit_batch(invs)
+        targets = self.lb_policy.choose_batch(invs,
+                                              self.cp.alive_platforms())
+        groups: Dict[str, List[Invocation]] = {}
+        unrouted: List[Invocation] = []
+        for inv, target in zip(invs, targets):
+            if target is None:
+                unrouted.append(inv)
+            else:
+                groups.setdefault(target.prof.name, []).append(inv)
+        accepted = 0
+        for pname, group in groups.items():
+            accepted += self.cp.submit_batch(group, platform_override=pname)
+        if unrouted:       # fall back to the scheduler, still a single path
+            accepted += self.cp.submit_batch(unrouted)
+        return accepted

@@ -25,6 +25,10 @@ class KnowledgeBase:
         self.decisions.append({"t": t, "fn": fn, "platform": platform,
                                "policy": policy, "predicted_s": predicted_s})
 
+    def record_decisions(self, rows: List[Dict]):
+        """Bulk append from the control plane's batched submit path."""
+        self.decisions.extend(rows)
+
     def best_platform(self, fn: str) -> Optional[str]:
         """Most frequent successful placement for fn (deployment hints)."""
         counts: Dict[str, int] = defaultdict(int)

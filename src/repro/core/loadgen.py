@@ -1,16 +1,26 @@
-"""k6-style load generator (paper §4.3): N virtual users (VUs) iterate
-request -> wait-for-completion -> sleep for a fixed duration. Deterministic
-on the SimClock; per-VU think-time jitter is seeded.
+"""k6-style load generator (paper §4.3), in two workload models:
 
-``run_load`` drives an FDNControlPlane (or a raw TargetPlatform through a
-submit callable) exactly the way the paper's k6 scripts drove the five
-platforms (VUs 10-50, duration 600 s, optional sleep between requests).
+Closed loop — ``run_load``: N virtual users (VUs) iterate request ->
+wait-for-completion -> sleep, exactly the way the paper's k6 scripts drove
+the five platforms (VUs 10-50, duration 600 s, optional sleep).
+
+Open loop — arrival-driven: ``poisson_arrivals`` / ``trace_arrivals``
+produce a NumPy array of arrival timestamps (seeded Poisson process, or a
+replayable trace), and ``run_arrivals`` admits them through a batch-submit
+callable (``FDNControlPlane.submit_batch`` / ``Gateway.request_batch``),
+grouping arrivals into sub-window bursts.  Results stream into a
+``ColumnarResultSink`` — flat NumPy columns, no Python object retained per
+latency sample — so a run can sustain ~10^6 invocations.
+
+Everything is deterministic on the SimClock; all randomness is seeded.
 """
 from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.simulator import SimClock
 from repro.core.types import FunctionSpec, Invocation
@@ -96,6 +106,175 @@ def run_open_loop(clock: SimClock, submit: Callable[[Invocation], None],
     # allow in-flight work to drain
     clock.run_until(t0 + duration_s + 60.0)
     return LoadResult(out)
+
+
+# ---------------------------------------------------------------------------
+# Open-loop arrival processes (workload-model diversity: the paper's k6
+# constant-arrival executor, a Poisson process, and trace replay)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(rps: float, duration_s: float, seed: int = 42,
+                     t0: float = 0.0) -> np.ndarray:
+    """Seeded Poisson arrival process: exponential inter-arrival gaps at
+    mean rate ``rps`` for ``duration_s`` seconds.  Same seed -> identical
+    arrival array (replayable)."""
+    if rps <= 0 or duration_s <= 0:
+        return np.empty(0)
+    rng = np.random.default_rng(seed)
+    # draw with headroom, extend until the window is covered
+    n = max(int(rps * duration_s * 1.2) + 16, 16)
+    gaps = rng.exponential(1.0 / rps, size=n)
+    t = np.cumsum(gaps)
+    while t[-1] < duration_s:
+        more = rng.exponential(1.0 / rps, size=n)
+        t = np.concatenate([t, t[-1] + np.cumsum(more)])
+    return t0 + t[t < duration_s]
+
+
+def uniform_arrivals(rps: float, duration_s: float,
+                     t0: float = 0.0) -> np.ndarray:
+    """k6 constant-arrival-rate executor: evenly spaced arrivals."""
+    n = int(rps * duration_s)
+    return t0 + np.arange(n) / rps
+
+
+def trace_arrivals(times: Sequence[float], t0: float = 0.0,
+                   time_scale: float = 1.0) -> np.ndarray:
+    """Replay a recorded arrival trace (e.g. production timestamps),
+    shifted to start at ``t0`` and optionally time-dilated."""
+    t = np.sort(np.asarray(list(times), dtype=float))
+    if t.size == 0:
+        return t
+    return t0 + (t - t[0]) * time_scale
+
+
+class ColumnarResultSink:
+    """Flat-column result collector for open-loop runs.
+
+    Completions append scalars into growable NumPy columns (arrival time,
+    end time, platform id, cold-start flag); nothing per-sample survives in
+    Python object form, so a 10^6-invocation run costs ~40 MB instead of a
+    list of a million Invocation objects.
+    """
+
+    def __init__(self, capacity: int = 1024):
+        self._n = 0
+        self._arrival = np.empty(capacity)
+        self._end = np.empty(capacity)
+        self._platform = np.empty(capacity, np.int32)
+        self._cold = np.empty(capacity, bool)
+        self._platform_ids: Dict[str, int] = {}
+        self.submitted = 0
+        self.rejected = 0
+
+    # -------------------------------------------------------- ingest ---
+    def _grow(self):
+        cap = self._arrival.size * 2
+        for name in ("_arrival", "_end", "_platform", "_cold"):
+            a = getattr(self, name)
+            b = np.empty(cap, a.dtype)
+            b[:self._n] = a[:self._n]
+            setattr(self, name, b)
+
+    def record_completion(self, inv: Invocation):
+        if self._n == self._arrival.size:
+            self._grow()
+        i = self._n
+        self._arrival[i] = inv.arrival_t
+        self._end[i] = inv.end_t if inv.end_t is not None else np.nan
+        pid = self._platform_ids.setdefault(inv.platform or "?",
+                                            len(self._platform_ids))
+        self._platform[i] = pid
+        self._cold[i] = inv.cold_start
+        self._n = i + 1
+
+    def install(self, control_plane) -> "ColumnarResultSink":
+        """Subscribe to every platform's completion stream."""
+        for p in control_plane.platforms.values():
+            if self.record_completion not in p.on_complete:
+                p.on_complete.append(self.record_completion)
+        return self
+
+    # --------------------------------------------------------- stats ---
+    @property
+    def completed(self) -> int:
+        return self._n
+
+    def response_times(self) -> np.ndarray:
+        return self._end[:self._n] - self._arrival[:self._n]
+
+    def p90_response(self) -> float:
+        from repro.core.monitoring import percentile
+        rt = self.response_times()
+        return percentile(np.sort(rt[~np.isnan(rt)]), 0.90)
+
+    def mean_response(self) -> float:
+        rt = self.response_times()
+        return float(np.nanmean(rt)) if rt.size else float("nan")
+
+    def requests_per_s(self, duration: float) -> float:
+        return self._n / max(duration, 1e-9)
+
+    def cold_start_count(self) -> int:
+        return int(self._cold[:self._n].sum())
+
+    def platform_counts(self) -> Dict[str, int]:
+        counts = np.bincount(self._platform[:self._n],
+                             minlength=len(self._platform_ids))
+        return {name: int(counts[pid])
+                for name, pid in self._platform_ids.items()}
+
+    def to_metrics(self, registry, platform: str = "_loadgen",
+                   fn: str = "*") -> None:
+        """Push the collected latency column into a MetricsRegistry in one
+        columnar ingest."""
+        rt = self.response_times()
+        ok = ~np.isnan(rt)
+        registry.add_many(platform, fn, "response_time",
+                          self._end[:self._n][ok], rt[ok])
+
+
+def run_arrivals(clock: SimClock, submit_batch: Callable[[List[Invocation]],
+                                                         int],
+                 fn: FunctionSpec, arrivals: np.ndarray,
+                 batch_window_s: float = 0.05, sink:
+                 Optional[ColumnarResultSink] = None,
+                 drain_s: float = 120.0) -> ColumnarResultSink:
+    """Open-loop replay: admit ``arrivals`` through a batch-submit callable.
+
+    Arrivals inside one ``batch_window_s`` sub-window are admitted together
+    at the window's close (one policy evaluation per burst); each
+    invocation keeps its true arrival timestamp, so measured response
+    times include the admission delay.  With ``batch_window_s <= 0`` every
+    arrival is its own batch (the per-invocation baseline).
+    """
+    sink = sink or ColumnarResultSink()
+    arrivals = np.asarray(arrivals, dtype=float)
+    if arrivals.size == 0:
+        return sink
+    t_end = float(arrivals[-1])
+    if batch_window_s > 0:
+        edges = np.arange(float(arrivals[0]), t_end + batch_window_s,
+                          batch_window_s)
+        starts = np.searchsorted(arrivals, edges, side="left")
+        bounds = [(int(a), int(b)) for a, b in
+                  zip(starts, list(starts[1:]) + [arrivals.size]) if b > a]
+    else:
+        bounds = [(i, i + 1) for i in range(arrivals.size)]
+
+    def fire(lo: int, hi: int):
+        invs = [Invocation(fn, float(arrivals[i])) for i in range(lo, hi)]
+        sink.submitted += len(invs)
+        accepted = submit_batch(invs)
+        sink.rejected += len(invs) - accepted
+
+    times = [float(arrivals[hi - 1]) for lo, hi in bounds]
+    clock.schedule_many(times,
+                        [lambda lo=lo, hi=hi: fire(lo, hi)
+                         for lo, hi in bounds])
+    clock.run_until(t_end)
+    clock.run_until(t_end + drain_s)          # gracefulStop: drain in-flight
+    return sink
 
 
 def attach_completion_hooks(control_plane) -> None:

@@ -11,19 +11,22 @@ from __future__ import annotations
 import bisect
 import math
 from collections import defaultdict
+
+import numpy as np
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.types import Invocation
 
 
-def percentile(sorted_vals: List[float], q: float) -> float:
-    if not sorted_vals:
+def percentile(sorted_vals, q: float) -> float:
+    """Linear-interpolated percentile over an ascending list OR ndarray."""
+    if len(sorted_vals) == 0:
         return float("nan")
     idx = q * (len(sorted_vals) - 1)
     lo = int(math.floor(idx))
     hi = min(lo + 1, len(sorted_vals) - 1)
     frac = idx - lo
-    return sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac
+    return float(sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac)
 
 
 class WindowSeries:
@@ -40,6 +43,24 @@ class WindowSeries:
         self.sums[w] += v
         self.counts[w] += 1
         self.values[w].append(v)
+
+    def add_many(self, ts, vs):
+        """Columnar ingest: fold parallel (t, v) arrays window-by-window
+        (one dict update per touched window, not per sample)."""
+        ts = np.asarray(ts, dtype=float)
+        vs = np.asarray(vs, dtype=float)
+        if ts.size == 0:
+            return
+        ws = (ts // self.window_s).astype(int)
+        order = np.argsort(ws, kind="stable")
+        ws, vs = ws[order], vs[order]
+        bounds = np.flatnonzero(np.diff(ws)) + 1
+        for chunk_w, chunk_v in zip(np.split(ws, bounds),
+                                    np.split(vs, bounds)):
+            w = int(chunk_w[0])
+            self.sums[w] += float(chunk_v.sum())
+            self.counts[w] += int(chunk_v.size)
+            self.values[w].extend(chunk_v.tolist())
 
     def windows(self) -> List[int]:
         return sorted(self.sums)
@@ -94,6 +115,10 @@ class MetricsRegistry:
 
     def add(self, platform: str, fn: str, metric: str, t: float, v: float):
         self._get(platform, fn, metric).add(t, v)
+
+    def add_many(self, platform: str, fn: str, metric: str, ts, vs):
+        """Bulk sample ingest (columnar result sinks, batched replays)."""
+        self._get(platform, fn, metric).add_many(ts, vs)
 
     def record_completion(self, inv: Invocation, visible_infra: bool = True):
         p, f, t = inv.platform or "?", inv.fn.name, inv.end_t or 0.0

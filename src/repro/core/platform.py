@@ -30,13 +30,16 @@ COLD, PREWARM, WARM = "cold", "prewarm", "warm"
 
 
 class Replica:
-    __slots__ = ("state", "busy", "last_used", "fn")
+    __slots__ = ("state", "busy", "last_used", "fn", "retired")
 
     def __init__(self, fn: str, state: str = COLD):
         self.fn = fn
         self.state = state
         self.busy = False
         self.last_used = 0.0
+        # set when the idler / destroy / recover removes the replica; lets
+        # the free-list skip stale entries lazily instead of rebuilding
+        self.retired = False
 
 
 class ExecutionModel:
@@ -82,6 +85,12 @@ class TargetPlatform:
         self.placement = placement
         self.exec_model = exec_model or ExecutionModel()
         self.replicas: Dict[str, List[Replica]] = defaultdict(list)
+        # O(1) admission accounting: busy-replica counter + per-function
+        # free-replica pools keyed by lifecycle state.  The old full scans
+        # of every replica per admission went quadratic under sustained
+        # batch load (elastic platforms grow replicas without bound).
+        self._busy = 0
+        self._free: Dict[str, Dict[str, List[Replica]]] = {}
         self.queue: deque = deque()
         self.deployed: Dict[str, FunctionSpec] = {}
         self.failed = False
@@ -101,15 +110,28 @@ class TargetPlatform:
                              f"platform {self.prof.name}")
         self.deployed[fn.name] = fn
         for _ in range(self.prof.prewarm_pool):
-            self.replicas[fn.name].append(Replica(fn.name, PREWARM))
+            rep = Replica(fn.name, PREWARM)
+            self.replicas[fn.name].append(rep)
+            self._push_free(rep)
 
     def destroy(self, fn_name: str):
         self.deployed.pop(fn_name, None)
-        self.replicas.pop(fn_name, None)
+        for r in self.replicas.pop(fn_name, []):
+            if r.busy and not r.retired:
+                self._busy -= 1
+            r.retired = True
+        self._free.pop(fn_name, None)
 
     # ------------------------------------------------------- accounting ---
     def busy_replicas(self) -> int:
-        return sum(1 for rs in self.replicas.values() for r in rs if r.busy)
+        return self._busy
+
+    def _push_free(self, rep: Replica):
+        pools = self._free.get(rep.fn)
+        if pools is None:
+            pools = {WARM: [], PREWARM: [], COLD: []}
+            self._free[rep.fn] = pools
+        pools[rep.state].append(rep)
 
     def replica_count(self, fn: str) -> int:
         return len(self.replicas[fn])
@@ -157,26 +179,53 @@ class TargetPlatform:
 
     def invoke(self, inv: Invocation):
         """Entry point from the sidecar/control plane."""
+        if not self._enqueue(inv):
+            return
+        self._drain()
+        self._schedule_idler()
+
+    def invoke_batch(self, invs):
+        """Batched entry point: enqueue the whole group, then drain once.
+
+        FIFO semantics are identical to repeated ``invoke`` calls (the
+        drain loop assigns replicas in queue order either way); the saving
+        is one queue drain + one energy/infra sample per batch instead of
+        per invocation."""
+        queued = False
+        for inv in invs:
+            queued = self._enqueue(inv) or queued
+        if queued:
+            self._drain()
+            self._schedule_idler()
+
+    def _enqueue(self, inv: Invocation) -> bool:
         if self.failed:
             self._fail(inv, "platform down")
-            return
+            return False
         if inv.fn.name not in self.deployed:
             self._fail(inv, "function not deployed")
-            return
+            return False
         inv.platform = self.prof.name
         inv.scheduled_t = self.clock.now()
         inv.status = "queued"
         self.inflight[inv.id] = inv
         self.queue.append(inv)
-        self._drain()
-        self._schedule_idler()
+        return True
 
     def _find_replica(self, fn: str) -> Optional[Replica]:
-        free = [r for r in self.replicas[fn] if not r.busy]
+        """Warmest free replica (WARM > PREWARM > COLD), popped from the
+        per-state free pools in O(1); stale entries (retired by the idler,
+        or whose state moved on) are skipped lazily."""
+        pools = self._free.get(fn)
+        if pools is None:
+            return None
         for state in (WARM, PREWARM, COLD):
-            for r in free:
-                if r.state == state:
-                    return r
+            lst = pools[state]
+            while lst:
+                r = lst.pop()
+                if r.retired or r.busy or r.state != state:
+                    continue
+                return r
         return None
 
     def _drain(self):
@@ -230,6 +279,7 @@ class TargetPlatform:
         rep.state = WARM
         rep.busy = True
         rep.last_used = now
+        self._busy += 1
 
         data_t = 0.0
         payloads = []
@@ -254,6 +304,9 @@ class TargetPlatform:
         def finish():
             rep.busy = False
             rep.last_used = self.clock.now()
+            if not rep.retired:
+                self._busy -= 1
+                self._push_free(rep)
             if self.failed or inv.status == "failed":
                 return
             inv.end_t = self.clock.now()
@@ -286,9 +339,13 @@ class TargetPlatform:
             self._idler_scheduled = False
             now = self.clock.now()
             for fn, rs in list(self.replicas.items()):
-                keep = [r for r in rs
-                        if r.busy or now - r.last_used <
-                        self.prof.scale_to_zero_s or r.state == PREWARM]
+                keep = []
+                for r in rs:
+                    if r.busy or now - r.last_used < \
+                            self.prof.scale_to_zero_s or r.state == PREWARM:
+                        keep.append(r)
+                    else:
+                        r.retired = True
                 self.replicas[fn] = keep
             self._touch_energy()
             if any(self.replicas.values()):
@@ -299,7 +356,9 @@ class TargetPlatform:
     def prewarm(self, fn_name: str, n: int):
         """Predictive prewarming from the EventModel forecast (§3.3 (1))."""
         for _ in range(n):
-            self.replicas[fn_name].append(Replica(fn_name, PREWARM))
+            rep = Replica(fn_name, PREWARM)
+            self.replicas[fn_name].append(rep)
+            self._push_free(rep)
 
     # ------------------------------------------------------------ faults --
     def fail(self):
@@ -315,4 +374,8 @@ class TargetPlatform:
     def recover(self):
         self.failed = False
         for rs in self.replicas.values():
+            for r in rs:
+                r.retired = True
             rs.clear()
+        self._free.clear()
+        self._busy = 0

@@ -11,11 +11,22 @@ target platform. One policy class per opportunity evaluated in §5:
                             SLO feasibility -> locality cost -> energy tie-
                             break (hierarchical; node choice delegated to
                             the platform's SidecarController)
+
+Policies are *vectorized*: the platform set is snapshotted once into
+columnar NumPy arrays (``PlatformSnapshot``) and each policy produces a
+``score(invs, snapshot) -> (N, P)`` cost matrix in one pass, so a whole
+arrival batch is routed with array ops instead of N x P Python calls.
+``choose`` is the batch-of-1 case of ``choose_batch``; row-wise argmin
+breaks ties exactly like the historical per-platform ``min`` scan
+(first-lowest in platform order), so scalar and batch paths pick
+identical platforms.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.core.behavioral import FunctionPerformanceModel
 from repro.core.data_placement import DataPlacementManager
@@ -23,20 +34,149 @@ from repro.core.platform import TargetPlatform
 from repro.core.types import FunctionSpec, Invocation
 
 
+class FnView:
+    """Per-function columns over a snapshot's platforms (one row of the
+    decision problem, broadcast to every invocation of that function)."""
+
+    __slots__ = ("fn", "alive", "exec_s", "p90_s", "energy_j", "data_s")
+
+    def __init__(self, fn: FunctionSpec):
+        self.fn = fn
+        self.alive: Optional[np.ndarray] = None
+        self.exec_s: Optional[np.ndarray] = None
+        self.p90_s: Optional[np.ndarray] = None
+        self.energy_j: Optional[np.ndarray] = None
+        self.data_s: Optional[np.ndarray] = None
+
+
+class PlatformSnapshot:
+    """Columnar view of a platform set at one scheduling instant.
+
+    Platform state (memory, CPU/memory utilization, liveness, deployment)
+    is captured eagerly; per-function predictions (exec / P90 / energy /
+    data-access time) are computed lazily, once per distinct function, and
+    cached for the lifetime of the snapshot.  A snapshot is only valid for
+    the scheduling instant it was taken at — take a fresh one per batch.
+    """
+
+    __slots__ = ("platforms", "profs", "names", "n", "failed",
+                 "total_memory_mb", "cpu_util", "mem_util", "_fn_cache")
+
+    def __init__(self, platforms: Sequence[TargetPlatform]):
+        self.platforms = list(platforms)
+        self.n = len(self.platforms)
+        self.profs = [p.prof for p in self.platforms]
+        self.names = [pr.name for pr in self.profs]
+        self.total_memory_mb = np.array(
+            [float(pr.total_memory_mb) for pr in self.profs])
+        self.failed = np.array(
+            [bool(getattr(p, "failed", False)) for p in self.platforms])
+        self.cpu_util = np.array([self._util(p, "cpu_util")
+                                  for p in self.platforms])
+        self.mem_util = np.array([self._util(p, "mem_util")
+                                  for p in self.platforms])
+        self._fn_cache: Dict[tuple, FnView] = {}
+
+    @staticmethod
+    def _util(p, attr: str) -> float:
+        f = getattr(p, attr, None)
+        return float(f()) if callable(f) else 0.0
+
+    def fn_view(self, fn: FunctionSpec,
+                perf: Optional[FunctionPerformanceModel] = None,
+                placement: Optional[DataPlacementManager] = None,
+                p90: bool = False, energy: bool = False) -> FnView:
+        """Columns are computed on demand (a perf-ranked policy must not
+        pay for P90/energy predictions) and filled incrementally on cache
+        hits when a later policy asks for more."""
+        # keyed by object identity: FunctionSpec hashing walks every field,
+        # which is far too slow for 10^5-row batches
+        key = (id(fn), id(perf), id(placement))
+        v = self._fn_cache.get(key)
+        if v is None:
+            v = FnView(fn)
+            deployed = np.array([fn.name in getattr(p, "deployed", {})
+                                 for p in self.platforms])
+            v.alive = (~self.failed) & deployed & \
+                (self.total_memory_mb >= fn.memory_mb)
+            if placement is not None and fn.data_objects:
+                v.data_s = np.array(
+                    [sum(placement.access_time(o, name)
+                         for o in fn.data_objects) for name in self.names])
+            else:
+                v.data_s = np.zeros(self.n)
+            self._fn_cache[key] = v
+        if perf is not None:
+            if v.exec_s is None:
+                v.exec_s = np.array([perf.predict_exec(fn, pr)
+                                     for pr in self.profs])
+            if p90 and v.p90_s is None:
+                v.p90_s = np.array([perf.predict_p90_response(fn, pr)
+                                    for pr in self.profs])
+            if energy and v.energy_j is None:
+                v.energy_j = np.array([perf.predict_energy(fn, pr)
+                                       for pr in self.profs])
+        return v
+
+
+PlatformsLike = Union[PlatformSnapshot, Sequence[TargetPlatform]]
+
+
+def as_snapshot(platforms: PlatformsLike) -> PlatformSnapshot:
+    if isinstance(platforms, PlatformSnapshot):
+        return platforms
+    return PlatformSnapshot(platforms)
+
+
 class Policy:
     name = "base"
 
-    def choose(self, inv: Invocation,
-               platforms: Sequence[TargetPlatform]
-               ) -> Optional[TargetPlatform]:
+    # ------------------------------------------------- vectorized core ---
+    def score(self, invs: Sequence[Invocation],
+              snap: PlatformSnapshot) -> np.ndarray:
+        """(N, P) cost matrix; np.inf marks an infeasible pairing."""
         raise NotImplementedError
 
-    def _alive(self, inv: Invocation, platforms) -> List[TargetPlatform]:
-        """Deployed, alive, and the function FITS (a 405B model's weights
-        cannot be delivered to a 16-chip slice — hard capability check)."""
-        return [p for p in platforms
-                if not p.failed and inv.fn.name in p.deployed
-                and p.prof.total_memory_mb >= inv.fn.memory_mb]
+    def choose_batch(self, invs: Sequence[Invocation],
+                     platforms: PlatformsLike
+                     ) -> List[Optional[TargetPlatform]]:
+        """Route a whole batch in one policy evaluation (row-wise argmin)."""
+        snap = as_snapshot(platforms)
+        if not invs or snap.n == 0:
+            return [None] * len(invs)
+        costs = self.score(invs, snap)
+        finite = np.isfinite(costs)
+        any_ok = finite.any(axis=1)
+        idx = np.argmin(np.where(finite, costs, np.inf), axis=1)
+        plats = snap.platforms
+        return [plats[j] if ok else None
+                for j, ok in zip(idx.tolist(), any_ok.tolist())]
+
+    def choose(self, inv: Invocation,
+               platforms: PlatformsLike) -> Optional[TargetPlatform]:
+        return self.choose_batch([inv], platforms)[0]
+
+    # --------------------------------------------------------- helpers ---
+    def _per_fn_rows(self, invs: Sequence[Invocation],
+                     snap: PlatformSnapshot, row_fn) -> np.ndarray:
+        """Assemble the (N, P) matrix from one cost row per distinct
+        function (policy cost depends on the FunctionSpec, not on which
+        invocation carries it)."""
+        out = np.empty((len(invs), snap.n))
+        groups: Dict[int, tuple] = {}
+        for i, inv in enumerate(invs):
+            g = groups.get(id(inv.fn))
+            if g is None:
+                groups[id(inv.fn)] = (inv.fn, [i])
+            else:
+                g[1].append(i)
+        for fn, idxs in groups.values():
+            out[idxs] = row_fn(fn)
+        return out
+
+
+def _masked(cost: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    return np.where(mask, cost, np.inf)
 
 
 class PerformanceRankedPolicy(Policy):
@@ -45,12 +185,11 @@ class PerformanceRankedPolicy(Policy):
     def __init__(self, perf: FunctionPerformanceModel):
         self.perf = perf
 
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        return min(cands,
-                   key=lambda p: self.perf.predict_exec(inv.fn, p.prof))
+    def score(self, invs, snap):
+        def row(fn):
+            v = snap.fn_view(fn, self.perf)
+            return _masked(v.exec_s, v.alive)
+        return self._per_fn_rows(invs, snap, row)
 
 
 class UtilizationAwarePolicy(Policy):
@@ -62,34 +201,45 @@ class UtilizationAwarePolicy(Policy):
         self.cpu_threshold = cpu_threshold
         self.mem_threshold = mem_threshold
 
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        ok = [p for p in cands
-              if p.cpu_util() < self.cpu_threshold
-              and p.mem_util() < self.mem_threshold]
-        pool = ok or cands                      # degrade gracefully
-        return min(pool,
-                   key=lambda p: self.perf.predict_exec(inv.fn, p.prof))
+    def score(self, invs, snap):
+        unloaded = (snap.cpu_util < self.cpu_threshold) & \
+            (snap.mem_util < self.mem_threshold)
+
+        def row(fn):
+            v = snap.fn_view(fn, self.perf)
+            ok = v.alive & unloaded
+            if not ok.any():                    # degrade gracefully
+                ok = v.alive
+            return _masked(v.exec_s, ok)
+        return self._per_fn_rows(invs, snap, row)
 
 
 class RoundRobinCollaboration(Policy):
+    """Stateful: ``score`` consumes one rotation tick per row, so batch
+    routing advances the round-robin exactly like N scalar ``choose``s."""
     name = "round_robin"
 
     def __init__(self):
         self._rr = itertools.count()
 
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        return cands[next(self._rr) % len(cands)]
+    def score(self, invs, snap):
+        out = np.full((len(invs), snap.n), np.inf)
+        cand_cache: Dict[int, List[int]] = {}
+        for i, inv in enumerate(invs):
+            cand = cand_cache.get(id(inv.fn))
+            if cand is None:
+                alive = snap.fn_view(inv.fn).alive
+                cand = np.flatnonzero(alive).tolist()
+                cand_cache[id(inv.fn)] = cand
+            if cand:
+                out[i, cand[next(self._rr) % len(cand)]] = 0.0
+        return out
 
 
 class WeightedCollaboration(Policy):
     """Static weights (paper used old-hpc:cloud = 5:1); weights may also be
-    derived from the performance model (capacity-proportional)."""
+    derived from the performance model (capacity-proportional). Stateful:
+    ``score`` walks the weighted schedule one row at a time."""
     name = "weighted"
 
     def __init__(self, weights: Dict[str, int]):
@@ -111,16 +261,29 @@ class WeightedCollaboration(Policy):
                 max(sum(q.prof.total_replicas for q in platforms), 1)))
         return cls(ws)
 
-    def choose(self, inv, platforms):
-        cands = {p.prof.name: p for p in self._alive(inv, platforms)}
-        if not cands or not self._sched:
-            return next(iter(cands.values()), None)
+    def _pick(self, cand_cols: Dict[str, int]) -> Optional[int]:
+        if not cand_cols or not self._sched:
+            return next(iter(cand_cols.values()), None)
         for _ in range(len(self._sched)):
             name = self._sched[self._i % len(self._sched)]
             self._i += 1
-            if name in cands:
-                return cands[name]
-        return next(iter(cands.values()), None)
+            if name in cand_cols:
+                return cand_cols[name]
+        return next(iter(cand_cols.values()), None)
+
+    def score(self, invs, snap):
+        out = np.full((len(invs), snap.n), np.inf)
+        cand_cache: Dict[int, Dict[str, int]] = {}
+        for i, inv in enumerate(invs):
+            cand = cand_cache.get(id(inv.fn))
+            if cand is None:
+                alive = snap.fn_view(inv.fn).alive
+                cand = {snap.names[j]: j for j in np.flatnonzero(alive)}
+                cand_cache[id(inv.fn)] = cand
+            col = self._pick(cand)
+            if col is not None:
+                out[i, col] = 0.0
+        return out
 
 
 class DataLocalityPolicy(Policy):
@@ -131,16 +294,11 @@ class DataLocalityPolicy(Policy):
         self.perf = perf
         self.placement = placement
 
-    def score(self, inv: Invocation, p: TargetPlatform) -> float:
-        data_t = sum(self.placement.access_time(o, p.prof.name)
-                     for o in inv.fn.data_objects)
-        return self.perf.predict_exec(inv.fn, p.prof) + data_t
-
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        return min(cands, key=lambda p: self.score(inv, p))
+    def score(self, invs, snap):
+        def row(fn):
+            v = snap.fn_view(fn, self.perf, self.placement)
+            return _masked(v.exec_s + v.data_s, v.alive)
+        return self._per_fn_rows(invs, snap, row)
 
 
 class EnergyAwarePolicy(Policy):
@@ -151,20 +309,21 @@ class EnergyAwarePolicy(Policy):
     def __init__(self, perf: FunctionPerformanceModel):
         self.perf = perf
 
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        feasible = [p for p in cands
-                    if self.perf.predict_p90_response(inv.fn, p.prof)
-                    <= inv.fn.slo.p90_response_s]
-        pool = feasible or cands
-        return min(pool,
-                   key=lambda p: self.perf.predict_energy(inv.fn, p.prof))
+    def score(self, invs, snap):
+        def row(fn):
+            v = snap.fn_view(fn, self.perf, p90=True, energy=True)
+            feasible = v.alive & (v.p90_s <= fn.slo.p90_response_s)
+            if not feasible.any():
+                feasible = v.alive
+            return _masked(v.energy_j, feasible)
+        return self._per_fn_rows(invs, snap, row)
 
 
 class SLOCompositePolicy(Policy):
-    """The FDN's production policy: hierarchical composite decision."""
+    """The FDN's production policy: hierarchical composite decision,
+    reduced to a filter cascade over the snapshot's columns:
+    utilization mask -> SLO-feasibility mask -> locality-adjusted latency
+    + energy tie-break."""
     name = "slo_composite"
 
     def __init__(self, perf: FunctionPerformanceModel,
@@ -177,28 +336,25 @@ class SLOCompositePolicy(Policy):
         self.mem_threshold = mem_threshold
         self.energy_weight = energy_weight
 
-    def choose(self, inv, platforms):
-        cands = self._alive(inv, platforms)
-        if not cands:
-            return None
-        # (1) utilization filter (§5.1.2)
-        ok = [p for p in cands if p.cpu_util() < self.cpu_threshold
-              and p.mem_util() < self.mem_threshold] or cands
-        # (2) SLO feasibility (§5.1.1)
-        feasible = [p for p in ok
-                    if self.perf.predict_p90_response(inv.fn, p.prof)
-                    <= inv.fn.slo.p90_response_s] or ok
+    def score(self, invs, snap):
+        unloaded = (snap.cpu_util < self.cpu_threshold) & \
+            (snap.mem_util < self.mem_threshold)
 
-        # (3) locality-adjusted latency + energy tie-break (§5.1.4, §5.2)
-        def score(p: TargetPlatform) -> float:
-            t = self.perf.predict_exec(inv.fn, p.prof)
-            if self.placement is not None:
-                t += sum(self.placement.access_time(o, p.prof.name)
-                         for o in inv.fn.data_objects)
-            e = self.perf.predict_energy(inv.fn, p.prof)
-            return t + self.energy_weight * e
-
-        return min(feasible, key=score)
+        def row(fn):
+            v = snap.fn_view(fn, self.perf, self.placement,
+                             p90=True, energy=True)
+            # (1) utilization filter (§5.1.2)
+            ok = v.alive & unloaded
+            if not ok.any():
+                ok = v.alive
+            # (2) SLO feasibility (§5.1.1)
+            feasible = ok & (v.p90_s <= fn.slo.p90_response_s)
+            if not feasible.any():
+                feasible = ok
+            # (3) locality-adjusted latency + energy tie-break (§5.1.4, §5.2)
+            cost = (v.exec_s + v.data_s) + self.energy_weight * v.energy_j
+            return _masked(cost, feasible)
+        return self._per_fn_rows(invs, snap, row)
 
 
 POLICIES = {cls.name: cls for cls in

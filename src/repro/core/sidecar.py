@@ -9,7 +9,7 @@ violate the SLO).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 from repro.core.behavioral import FunctionPerformanceModel
 from repro.core.platform import TargetPlatform
@@ -35,6 +35,12 @@ class SidecarController:
         decision for the knowledge base.
         """
         self.platform.invoke(inv)
+
+    def admit_many(self, invs: Sequence[Invocation]):
+        """Batched admission from the control plane's ``submit_batch``:
+        the platform enqueues the whole group and drains once, instead of
+        paying a full queue drain + metrics sample per invocation."""
+        self.platform.invoke_batch(invs)
 
     # local trigger path -------------------------------------------------
     def handle_local_trigger(self, inv: Invocation,

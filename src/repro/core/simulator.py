@@ -28,6 +28,18 @@ class SimClock:
     def after(self, dt: float, fn: Callable[[], None]) -> None:
         self.schedule(self._t + max(dt, 0.0), fn)
 
+    def schedule_many(self, times, fns) -> None:
+        """Bulk-schedule parallel sequences of times and callbacks (one
+        validation for the whole batch — used by the open-loop load
+        generator, which enqueues thousands of window events at once)."""
+        times = list(times)
+        if not times:
+            return
+        assert min(times) >= self._t - 1e-9, (min(times), self._t)
+        q, seq = self._q, self._seq
+        for t, fn in zip(times, fns):
+            heapq.heappush(q, (t, next(seq), fn))
+
     def step(self) -> bool:
         if not self._q:
             return False

@@ -54,7 +54,7 @@ class Invocation:
     __slots__ = ("id", "fn", "arrival_t", "vu", "args", "platform",
                  "scheduled_t", "start_t", "end_t", "status", "cold_start",
                  "exec_time", "data_time", "queue_time", "hedged_from",
-                 "attempts", "_on_done")
+                 "attempts", "arrival_recorded", "_on_done")
 
     def __init__(self, fn: FunctionSpec, arrival_t: float, vu: int = 0,
                  args: Any = None):
@@ -74,6 +74,9 @@ class Invocation:
         self.queue_time = 0.0
         self.hedged_from: Optional[int] = None
         self.attempts = 0
+        # arrival recorded in the behavioral models exactly once, even if
+        # the invocation is redelivered through submit() again
+        self.arrival_recorded = False
         self._on_done: Optional[Callable[[], None]] = None
 
     @property

@@ -153,6 +153,7 @@ def test_interference_cpu_and_memory():
     rep = Replica("nodeinfo")
     rep.busy = True
     p.replicas["nodeinfo"].append(rep)
+    p._busy += 1                     # busy accounting is counter-based
     p.bg_cpu = 1.0
     assert p._interference_factor() == pytest.approx(2.0)
     p.bg_cpu = 0.5                       # fits on the free half -> no effect

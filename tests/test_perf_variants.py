@@ -6,17 +6,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro import sharding as shd
 from repro.configs.registry import get_config
+from repro.launch.mesh import make_mesh
 from repro.models import model_api as api
 from repro.models import moe
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture(scope="module")

@@ -1,10 +1,17 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test extra (see pyproject.toml); without it
+this module degrades to a skip instead of a collection error.
+"""
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.behavioral import EWMA, EventModel, P2Quantile
 from repro.core.data_placement import LRUCache

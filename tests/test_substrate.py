@@ -69,11 +69,8 @@ def test_zero_spec_adds_dp_axis():
 
 # ------------------------------------------------------------- sharding ---
 def _mesh22():
-    import jax
-    from jax.sharding import AxisType
-    n = jax.device_count()
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_divisibility_fallback():
