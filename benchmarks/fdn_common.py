@@ -84,6 +84,15 @@ def result_row(name: str, res: LoadResult, duration: float,
     return Row(name, mean_rt * 1e6, derived)
 
 
+def scenario_row(name: str, stats: Dict, extra: str = "") -> Row:
+    """CSV row from one ScenarioReport per-platform/per-function entry."""
+    derived = (f"p90_s={stats['p90_s']:.3f};"
+               f"rps={stats['rps']:.1f};n={stats['completed']}")
+    if extra:
+        derived += ";" + extra
+    return Row(name, stats["mean_s"] * 1e6, derived)
+
+
 class CheckFailure(AssertionError):
     pass
 

@@ -1,5 +1,9 @@
 """Fig. 5: nodeinfo across VUs in {10, 20, 50} on all five platforms.
 
+Runs through the FDNInspector scenario runner (``registry.fig5_cell``)
+instead of a hand-wired control plane — each cell is a declarative
+Scenario and the stats come from its ScenarioReport.
+
 Paper claims validated here:
   * edge-cluster is worst on requests/s and P90 at every load;
   * below ~20 VUs the four non-edge platforms perform similarly;
@@ -10,8 +14,8 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
-                                   run_on_platform)
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry, run_scenario
 
 DURATION = 120.0
 
@@ -25,13 +29,11 @@ def run_bench() -> Tuple[List[Row], List[str]]:
         for pname in ("hpc-node-cluster", "old-hpc-node-cluster",
                       "cloud-cluster", "google-cloud-cluster",
                       "edge-cluster"):
-            cp, gw, fns = build_fdn()
-            res = run_on_platform(cp, gw, fns["nodeinfo"], pname, vus,
-                                  DURATION)
-            rows.append(result_row(f"fig5/nodeinfo/{pname}/vus{vus}", res,
-                                   DURATION))
-            served[(pname, vus)] = res.requests_per_s(DURATION)
-            p90[(pname, vus)] = res.p90_response()
+            rep = run_scenario(registry.fig5_cell(pname, vus, DURATION))
+            stats = rep.per_platform[pname]
+            rows.append(scenario_row(rep.scenario["name"], stats))
+            served[(pname, vus)] = stats["rps"]
+            p90[(pname, vus)] = stats["p90_s"]
 
     non_edge = ("hpc-node-cluster", "old-hpc-node-cluster",
                 "cloud-cluster", "google-cloud-cluster")

@@ -1,6 +1,9 @@
 """Fig. 7: primes-python / sentiment-analysis / JSON-loads at 30 VUs on the
 four non-edge platforms.
 
+Runs through the FDNInspector scenario runner (``registry.fig7_cell``) —
+each (function, platform) cell is a declarative Scenario.
+
 Paper claims validated here:
   * primes-python (compute-bound) is much slower everywhere and the
     hpc-node-cluster handles it best;
@@ -13,8 +16,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
-                                   run_on_platform)
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry, run_scenario
 
 DURATION = 120.0
 PLATFORMS = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
@@ -29,13 +32,11 @@ def run_bench() -> Tuple[List[Row], List[str]]:
     rps: Dict = {}
     for fn_name in FUNCTIONS:
         for pname in PLATFORMS:
-            cp, gw, fns = build_fdn()
-            res = run_on_platform(cp, gw, fns[fn_name], pname, 30, DURATION,
-                                  sleep_s=0.2)
-            rows.append(result_row(f"fig7/{fn_name}/{pname}/vus30", res,
-                                   DURATION))
-            p90[(fn_name, pname)] = res.p90_response()
-            rps[(fn_name, pname)] = res.requests_per_s(DURATION)
+            rep = run_scenario(registry.fig7_cell(pname, fn_name, DURATION))
+            stats = rep.per_platform[pname]
+            rows.append(scenario_row(rep.scenario["name"], stats))
+            p90[(fn_name, pname)] = stats["p90_s"]
+            rps[(fn_name, pname)] = stats["rps"]
 
     check(p90[("primes-python", "hpc-node-cluster")] ==
           min(p90[("primes-python", p)] for p in PLATFORMS),

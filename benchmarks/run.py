@@ -26,7 +26,25 @@ BENCHES = [
     "table4_energy",
     "policy_sweep",
     "bench_sched_throughput",
+    "bench_metrics_ingest",
 ]
+
+
+def scenario_main(args) -> int:
+    """``python benchmarks/run.py scenario [name]``: run one registered
+    FDNInspector scenario, validate its report schema, print the canonical
+    JSON.  No name (or --list) lists the registry."""
+    from repro.inspector import ScenarioReport, registry, run_scenario
+    if not args or args[0] in ("-l", "--list"):
+        for name in registry.names():
+            print(name)
+        return 0
+    name = args[0]
+    report = run_scenario(registry.get(name))
+    payload = report.to_json()
+    ScenarioReport.validate(json.loads(payload))
+    print(payload)
+    return 0
 
 
 def _summarize_json(path: str, kind: str):
@@ -54,6 +72,8 @@ def _summarize_json(path: str, kind: str):
 
 
 def main() -> int:
+    if len(sys.argv) > 1 and sys.argv[1] == "scenario":
+        return scenario_main(sys.argv[2:])
     t0 = time.time()
     all_failures = []
     print("name,us_per_call,derived")

@@ -1,6 +1,9 @@
 """Table 4: JSON-loads at a fixed open-loop arrival rate on edge-cluster vs
 hpc-node-cluster for 600 s (the paper's 40-VU / 400-per-unit-time load).
 
+Runs through the FDNInspector scenario runner (``registry.table4_cell``) —
+energy comes straight from the ScenarioReport's per-platform section.
+
 Paper claims validated here:
   * both platforms serve (essentially) the whole offered load;
   * both meet the 7 s P90 SLO;
@@ -12,8 +15,8 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import Row, build_fdn, check, result_row
-from repro.core.loadgen import run_open_loop
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry, run_scenario
 
 DURATION = 600.0
 RPS = 40.0          # the paper's 400 requests per 10 s sampling window
@@ -25,17 +28,12 @@ def run_bench() -> Tuple[List[Row], List[str]]:
     energy = {}
     stats = {}
     for pname in ("edge-cluster", "hpc-node-cluster"):
-        cp, gw, fns = build_fdn(data_location=pname)
-        res = run_open_loop(
-            cp.clock,
-            lambda inv: cp.submit(inv, platform_override=pname),
-            fns["JSON-loads"], RPS, DURATION)
-        cp.run_until(cp.clock.now())           # flush energy accounting
-        joules = cp.energy.joules(pname)
-        energy[pname] = joules
-        stats[pname] = res
-        rows.append(result_row(f"table4/JSON-loads/{pname}", res, DURATION,
-                               extra=f"joules={joules:.0f}"))
+        rep = run_scenario(registry.table4_cell(pname, DURATION, RPS))
+        s = rep.per_platform[pname]
+        energy[pname] = s["energy_j"]
+        stats[pname] = s
+        rows.append(scenario_row(rep.scenario["name"], s,
+                                 extra=f"joules={s['energy_j']:.0f}"))
 
     ratio = energy["hpc-node-cluster"] / max(energy["edge-cluster"], 1e-9)
     rows.append(Row("table4/energy_ratio", 0.0,
@@ -43,12 +41,11 @@ def run_bench() -> Tuple[List[Row], List[str]]:
                     f"edge_J={energy['edge-cluster']:.0f};"
                     f"ratio={ratio:.1f}x;paper=16.9x"))
 
-    for pname, res in stats.items():
-        served = len(res.completed)
-        check(served >= 0.98 * RPS * DURATION,
-              f"{pname} should serve ~the whole load (got {served})",
-              failures)
-        check(res.p90_response() <= 7.0,
+    for pname, s in stats.items():
+        check(s["completed"] >= 0.98 * RPS * DURATION,
+              f"{pname} should serve ~the whole load "
+              f"(got {s['completed']})", failures)
+        check(s["p90_s"] <= 7.0,
               f"{pname} should meet the 7 s P90 SLO", failures)
     check(ratio >= 8.0,
           f"energy ratio should be >=8x (measured {ratio:.1f}x)", failures)

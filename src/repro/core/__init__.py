@@ -23,7 +23,8 @@ from repro.core.scheduler import (POLICIES, PerformanceRankedPolicy,
                                   WeightedCollaboration, DataLocalityPolicy,
                                   EnergyAwarePolicy, SLOCompositePolicy)
 from repro.core.sidecar import SidecarController
-from repro.core.monitoring import MetricsRegistry
+from repro.core.monitoring import (ColumnarWindowSeries, MetricsRegistry,
+                                   WindowSeries)
 from repro.core.behavioral import (P2Quantile, EWMA, EventModel,
                                    FunctionPerformanceModel)
 from repro.core.knowledge_base import KnowledgeBase
@@ -41,7 +42,8 @@ __all__ = [
     "PerformanceRankedPolicy", "UtilizationAwarePolicy",
     "RoundRobinCollaboration", "WeightedCollaboration",
     "DataLocalityPolicy", "EnergyAwarePolicy", "SLOCompositePolicy",
-    "SidecarController", "MetricsRegistry", "P2Quantile", "EWMA",
+    "SidecarController", "MetricsRegistry", "ColumnarWindowSeries",
+    "WindowSeries", "P2Quantile", "EWMA",
     "EventModel", "FunctionPerformanceModel", "KnowledgeBase",
     "DeploymentGenerator", "DataPlacementManager", "ObjectStore",
     "EnergyMeter", "FailureDetector", "Redeliverer", "HedgePolicy",

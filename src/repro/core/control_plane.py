@@ -42,7 +42,8 @@ class FDNControlPlane:
                  policy: Optional[Policy] = None,
                  enable_hedging: bool = False,
                  predictive_prewarm: bool = False,
-                 kb_path: Optional[str] = None):
+                 kb_path: Optional[str] = None,
+                 retain_completions: bool = True):
         self.clock = clock or SimClock()
         self.metrics = MetricsRegistry()
         self.energy = EnergyMeter()
@@ -61,6 +62,12 @@ class FDNControlPlane:
         self.hedge = HedgePolicy(self.clock, self.perf,
                                  enabled=enable_hedging)
         self.predictive_prewarm = predictive_prewarm
+        # retain_completions=False drops the per-invocation completed and
+        # rejected lists (open-loop sinks own the samples; 10^6-invocation
+        # scenarios must not retain a million Invocation objects here)
+        self.retain_completions = retain_completions
+        self.completed_count = 0
+        self.rejected_count = 0
         self.completed: List[Invocation] = []
         self.rejected: List[Invocation] = []
 
@@ -148,7 +155,7 @@ class FDNControlPlane:
             target = self.policy.choose(inv, self.alive_platforms())
         if target is None:
             inv.status = "failed"
-            self.rejected.append(inv)
+            self._reject(inv)
             return False
         self.kb.record_decision(
             self.clock.now(), inv.fn.name, target.prof.name,
@@ -203,26 +210,32 @@ class FDNControlPlane:
         pred_cache: Dict[Tuple[str, str], float] = {}
         rows: List[Dict] = []
         policy_name = self.policy.name
+        log_decisions = self.kb.log_decisions
         for inv, target in zip(invs, targets):
             if target is None:
                 inv.status = "failed"
-                self.rejected.append(inv)
+                self._reject(inv)
                 continue
             pname = target.prof.name
-            key = (inv.fn.name, pname)
-            pred = pred_cache.get(key)
-            if pred is None:
-                pred = self.perf.predict_exec(inv.fn, target.prof)
-                pred_cache[key] = pred
-            rows.append({"t": now, "fn": inv.fn.name, "platform": pname,
-                         "policy": policy_name, "predicted_s": pred})
+            if log_decisions:
+                key = (inv.fn.name, pname)
+                pred = pred_cache.get(key)
+                if pred is None:
+                    pred = self.perf.predict_exec(inv.fn, target.prof)
+                    pred_cache[key] = pred
+                rows.append({"t": now, "fn": inv.fn.name,
+                             "platform": pname, "policy": policy_name,
+                             "predicted_s": pred})
             group = pname_groups.get(pname)
             if group is None:
                 pname_groups[pname] = [inv]
             else:
                 group.append(inv)
             accepted += 1
-        self.kb.record_decisions(rows)
+        if log_decisions:
+            self.kb.record_decisions(rows)
+        else:
+            self.kb.count_decisions(accepted)
         for pname, group in pname_groups.items():
             self.sidecars[pname].admit_many(group)
         if self.hedge.enabled:
@@ -235,11 +248,18 @@ class FDNControlPlane:
                     lambda i, p: self.sidecars[p.prof.name].admit(i))
         return accepted
 
+    def _reject(self, inv: Invocation):
+        self.rejected_count += 1
+        if self.retain_completions:
+            self.rejected.append(inv)
+
     # ---------------------------------------------------------- feedback --
     def _on_complete(self, inv: Invocation):
         self.perf.observe(inv)
         self.hedge.completed(inv)
-        self.completed.append(inv)
+        self.completed_count += 1
+        if self.retain_completions:
+            self.completed.append(inv)
 
     def _on_fail(self, inv: Invocation):
         self.redeliverer.handle_failure(

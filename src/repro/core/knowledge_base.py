@@ -14,6 +14,10 @@ class KnowledgeBase:
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.decisions: List[Dict] = []
+        # log_decisions=False keeps only the counter: a 10^6-invocation
+        # FDNInspector scenario must not grow a per-decision dict list
+        self.log_decisions = True
+        self.decision_count = 0
         self.benchmarks: Dict[Tuple[str, str], Dict] = {}
         self.models: Dict[str, Any] = {}
         if path and os.path.exists(path):
@@ -22,12 +26,21 @@ class KnowledgeBase:
     # decisions ----------------------------------------------------------
     def record_decision(self, t: float, fn: str, platform: str,
                         policy: str, predicted_s: float):
-        self.decisions.append({"t": t, "fn": fn, "platform": platform,
-                               "policy": policy, "predicted_s": predicted_s})
+        self.decision_count += 1
+        if self.log_decisions:
+            self.decisions.append({"t": t, "fn": fn, "platform": platform,
+                                   "policy": policy,
+                                   "predicted_s": predicted_s})
 
     def record_decisions(self, rows: List[Dict]):
         """Bulk append from the control plane's batched submit path."""
-        self.decisions.extend(rows)
+        self.decision_count += len(rows)
+        if self.log_decisions:
+            self.decisions.extend(rows)
+
+    def count_decisions(self, n: int):
+        """Row-free bookkeeping for un-logged batched decisions."""
+        self.decision_count += n
 
     def best_platform(self, fn: str) -> Optional[str]:
         """Most frequent successful placement for fn (deployment hints)."""

@@ -8,9 +8,12 @@ Open loop — arrival-driven: ``poisson_arrivals`` / ``trace_arrivals``
 produce a NumPy array of arrival timestamps (seeded Poisson process, or a
 replayable trace), and ``run_arrivals`` admits them through a batch-submit
 callable (``FDNControlPlane.submit_batch`` / ``Gateway.request_batch``),
-grouping arrivals into sub-window bursts.  Results stream into a
-``ColumnarResultSink`` — flat NumPy columns, no Python object retained per
-latency sample — so a run can sustain ~10^6 invocations.
+grouping arrivals into sub-window bursts.  ``run_arrival_mix`` is the
+multi-function variant: a merged arrival stream tagged with a function
+index per arrival (see ``repro.inspector.traces.WorkloadMix``).  Results
+stream into a ``ColumnarResultSink`` — flat NumPy columns, no Python
+object retained per latency sample — so a run can sustain ~10^6
+invocations.
 
 Everything is deterministic on the SimClock; all randomness is seeded.
 """
@@ -18,7 +21,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,33 +38,33 @@ class LoadResult:
         return [i for i in self.invocations if i.status == "done"]
 
     def p90_response(self) -> float:
-        from repro.core.monitoring import percentile
-        vals = sorted(i.response_time for i in self.completed
-                      if i.response_time is not None)
-        return percentile(vals, 0.90)
+        from repro.core.monitoring import percentile_unsorted
+        vals = np.array([i.response_time for i in self.completed
+                         if i.response_time is not None])
+        return percentile_unsorted(vals, 0.90)
 
     def requests_per_s(self, duration: float) -> float:
         return len(self.completed) / max(duration, 1e-9)
 
 
-def run_load(clock: SimClock, submit: Callable[[Invocation], None],
-             fn: FunctionSpec, vus: int, duration_s: float,
-             sleep_s: float = 0.0, seed: int = 42,
-             jitter: float = 0.05, drain_s: float = 120.0) -> LoadResult:
-    """Spawn `vus` virtual users for `duration_s` sim-seconds.
+def spawn_vus(clock: SimClock, submit: Callable[[Invocation], None],
+              fn: FunctionSpec, vus: int, t_end: float,
+              sleep_s: float = 0.0, seed: int = 42, jitter: float = 0.05,
+              out: Optional[List[Invocation]] = None) -> List[Invocation]:
+    """Schedule `vus` virtual-user loops on the clock WITHOUT running it.
 
-    After the VU window closes, the clock drains for up to `drain_s` so
-    in-flight invocations complete (k6's gracefulStop)."""
+    Each VU iterates request -> wait-for-completion -> think-sleep until
+    ``t_end``.  The caller advances the clock (``run_load`` drives a single
+    workload; the FDNInspector scenario runner spawns several VU pools plus
+    open-loop arrival streams and runs them all on one clock)."""
     rng = random.Random(seed)
-    t_start = clock.now()
-    t_end = t_start + duration_s
-    out: List[Invocation] = []
+    invs: List[Invocation] = out if out is not None else []
 
     def vu_loop(vu_id: int):
         if clock.now() >= t_end:
             return
         inv = Invocation(fn, clock.now(), vu=vu_id)
-        out.append(inv)
+        invs.append(inv)
         done_flag = {"fired": False}
 
         def next_iter(_inv=inv):
@@ -73,38 +76,56 @@ def run_load(clock: SimClock, submit: Callable[[Invocation], None],
 
         inv._on_done = next_iter          # platform completion hook
         submit(inv)
-        # safety: if the invocation was rejected outright, keep iterating
-        if inv.status == "failed":
+        # safety: if the invocation was rejected outright, keep iterating —
+        # but only if the completion hook has not already rescheduled this
+        # VU.  A platform that both fails the submit AND later fires
+        # _on_done (redelivery, hedging) must not fork the virtual user.
+        if inv.status == "failed" and not done_flag["fired"]:
+            done_flag["fired"] = True
             clock.after(max(sleep_s, 0.1), lambda: vu_loop(vu_id))
 
     for v in range(vus):
         clock.after(rng.random() * 0.1, lambda v=v: vu_loop(v))
+    return invs
+
+
+def run_load(clock: SimClock, submit: Callable[[Invocation], None],
+             fn: FunctionSpec, vus: int, duration_s: float,
+             sleep_s: float = 0.0, seed: int = 42,
+             jitter: float = 0.05, drain_s: float = 120.0) -> LoadResult:
+    """Spawn `vus` virtual users for `duration_s` sim-seconds.
+
+    After the VU window closes, the clock drains for up to `drain_s` so
+    in-flight invocations complete (k6's gracefulStop)."""
+    t_end = clock.now() + duration_s
+    out = spawn_vus(clock, submit, fn, vus, t_end, sleep_s=sleep_s,
+                    seed=seed, jitter=jitter)
     clock.run_until(t_end)
     clock.run_until(t_end + drain_s)          # gracefulStop: drain in-flight
     return LoadResult(out)
 
 
-def run_open_loop(clock: SimClock, submit: Callable[[Invocation], None],
+def run_open_loop(clock: SimClock, submit: Callable[[Invocation], bool],
                   fn: FunctionSpec, rps: float, duration_s: float,
                   seed: int = 42) -> LoadResult:
     """Open-loop (arrival-rate) load: k6's constant-arrival-rate executor.
-    Used for the Table-4 energy experiment (fixed 40 req/s per platform)."""
-    rng = random.Random(seed)
-    t0 = clock.now()
+    Used for the Table-4 energy experiment (fixed 40 req/s per platform).
+
+    Thin wrapper over ``uniform_arrivals`` + ``run_arrivals`` (the
+    hand-rolled arrival loop predated the batch path); ``batch_window_s=0``
+    keeps the historical per-invocation submit semantics.  ``seed`` is
+    retained for signature compatibility — evenly spaced arrivals need no
+    randomness."""
+    del seed
     out: List[Invocation] = []
-    n = int(rps * duration_s)
-    for i in range(n):
-        t = t0 + i / rps + rng.random() * 1e-3
 
-        def fire(t=t):
-            inv = Invocation(fn, clock.now())
-            out.append(inv)
-            submit(inv)
+    def submit_each(invs: List[Invocation]) -> int:
+        out.extend(invs)
+        return sum(1 for inv in invs if submit(inv))
 
-        clock.schedule(t, fire)
-    clock.run_until(t0 + duration_s)
-    # allow in-flight work to drain
-    clock.run_until(t0 + duration_s + 60.0)
+    arrivals = uniform_arrivals(rps, duration_s, t0=clock.now())
+    run_arrivals(clock, submit_each, fn, arrivals, batch_window_s=0.0,
+                 drain_s=60.0)
     return LoadResult(out)
 
 
@@ -152,25 +173,30 @@ class ColumnarResultSink:
     """Flat-column result collector for open-loop runs.
 
     Completions append scalars into growable NumPy columns (arrival time,
-    end time, platform id, cold-start flag); nothing per-sample survives in
-    Python object form, so a 10^6-invocation run costs ~40 MB instead of a
-    list of a million Invocation objects.
+    end time, platform id, function id, exec time, cold-start flag);
+    nothing per-sample survives in Python object form, so a 10^6-invocation
+    run costs ~50 MB instead of a list of a million Invocation objects.
     """
 
     def __init__(self, capacity: int = 1024):
         self._n = 0
         self._arrival = np.empty(capacity)
         self._end = np.empty(capacity)
+        self._exec = np.empty(capacity)
         self._platform = np.empty(capacity, np.int32)
+        self._fn = np.empty(capacity, np.int32)
         self._cold = np.empty(capacity, bool)
         self._platform_ids: Dict[str, int] = {}
+        self._fn_ids: Dict[str, int] = {}
+        self._fn_specs: Dict[str, FunctionSpec] = {}
         self.submitted = 0
         self.rejected = 0
 
     # -------------------------------------------------------- ingest ---
-    def _grow(self):
-        cap = self._arrival.size * 2
-        for name in ("_arrival", "_end", "_platform", "_cold"):
+    def _grow(self, need: int):
+        cap = max(self._arrival.size * 2, need)
+        for name in ("_arrival", "_end", "_exec", "_platform", "_fn",
+                     "_cold"):
             a = getattr(self, name)
             b = np.empty(cap, a.dtype)
             b[:self._n] = a[:self._n]
@@ -178,15 +204,48 @@ class ColumnarResultSink:
 
     def record_completion(self, inv: Invocation):
         if self._n == self._arrival.size:
-            self._grow()
+            self._grow(self._n + 1)
         i = self._n
         self._arrival[i] = inv.arrival_t
         self._end[i] = inv.end_t if inv.end_t is not None else np.nan
+        self._exec[i] = inv.exec_time
         pid = self._platform_ids.setdefault(inv.platform or "?",
                                             len(self._platform_ids))
         self._platform[i] = pid
+        fname = inv.fn.name
+        fid = self._fn_ids.get(fname)
+        if fid is None:
+            fid = len(self._fn_ids)
+            self._fn_ids[fname] = fid
+            self._fn_specs[fname] = inv.fn
+        self._fn[i] = fid
         self._cold[i] = inv.cold_start
         self._n = i + 1
+
+    @classmethod
+    def from_columns(cls, arrival: np.ndarray, end: np.ndarray,
+                     platforms: Sequence[str], platform_idx: np.ndarray,
+                     fns: Sequence[FunctionSpec], fn_idx: np.ndarray,
+                     cold: Optional[np.ndarray] = None,
+                     exec_s: Optional[np.ndarray] = None
+                     ) -> "ColumnarResultSink":
+        """Build a sink directly from completion columns (synthetic-ingest
+        benchmarks and tests; the live path is ``record_completion``)."""
+        n = int(np.asarray(arrival).size)
+        sink = cls(capacity=max(n, 1))
+        sink._arrival[:n] = arrival
+        sink._end[:n] = end
+        sink._exec[:n] = exec_s if exec_s is not None \
+            else np.asarray(end) - np.asarray(arrival)
+        sink._platform[:n] = platform_idx
+        sink._fn[:n] = fn_idx
+        sink._cold[:n] = cold if cold is not None else False
+        sink._platform_ids = {name: i for i, name in enumerate(platforms)}
+        sink._fn_ids = {f.name: i for i, f in enumerate(fns)}
+        sink._fn_specs = {f.name: f for f in fns}
+        sink._n = n
+        sink.submitted = n
+        return sink
 
     def install(self, control_plane) -> "ColumnarResultSink":
         """Subscribe to every platform's completion stream."""
@@ -200,13 +259,24 @@ class ColumnarResultSink:
     def completed(self) -> int:
         return self._n
 
+    def completion_columns(self) -> Dict:
+        """The collected columns (views, not copies) plus the id maps —
+        the contract consumed by ``MetricsRegistry.record_completions``."""
+        n = self._n
+        return {"arrival": self._arrival[:n], "end": self._end[:n],
+                "exec": self._exec[:n], "platform": self._platform[:n],
+                "fn": self._fn[:n], "cold": self._cold[:n],
+                "platform_ids": dict(self._platform_ids),
+                "fn_ids": dict(self._fn_ids),
+                "fn_specs": dict(self._fn_specs)}
+
     def response_times(self) -> np.ndarray:
         return self._end[:self._n] - self._arrival[:self._n]
 
     def p90_response(self) -> float:
-        from repro.core.monitoring import percentile
+        from repro.core.monitoring import percentile_unsorted
         rt = self.response_times()
-        return percentile(np.sort(rt[~np.isnan(rt)]), 0.90)
+        return percentile_unsorted(rt[~np.isnan(rt)], 0.90)
 
     def mean_response(self) -> float:
         rt = self.response_times()
@@ -224,6 +294,12 @@ class ColumnarResultSink:
         return {name: int(counts[pid])
                 for name, pid in self._platform_ids.items()}
 
+    def fn_counts(self) -> Dict[str, int]:
+        counts = np.bincount(self._fn[:self._n],
+                             minlength=len(self._fn_ids))
+        return {name: int(counts[fid])
+                for name, fid in self._fn_ids.items()}
+
     def to_metrics(self, registry, platform: str = "_loadgen",
                    fn: str = "*") -> None:
         """Push the collected latency column into a MetricsRegistry in one
@@ -234,6 +310,71 @@ class ColumnarResultSink:
                           self._end[:self._n][ok], rt[ok])
 
 
+def _burst_bounds(arrivals: np.ndarray,
+                  batch_window_s: float) -> List[Tuple[int, int]]:
+    """Index ranges of arrivals grouped into ``batch_window_s`` sub-window
+    bursts (``<= 0``: every arrival is its own batch)."""
+    if batch_window_s > 0:
+        edges = np.arange(float(arrivals[0]),
+                          float(arrivals[-1]) + batch_window_s,
+                          batch_window_s)
+        starts = np.searchsorted(arrivals, edges, side="left")
+        return [(int(a), int(b)) for a, b in
+                zip(starts, list(starts[1:]) + [arrivals.size]) if b > a]
+    return [(i, i + 1) for i in range(arrivals.size)]
+
+
+def schedule_arrival_mix(clock: SimClock,
+                         submit_batch: Callable[[List[Invocation]], int],
+                         specs: Sequence[FunctionSpec], times: np.ndarray,
+                         fn_idx: np.ndarray, batch_window_s: float = 0.05,
+                         sink: Optional[ColumnarResultSink] = None
+                         ) -> ColumnarResultSink:
+    """Enqueue a multi-function arrival stream WITHOUT running the clock.
+
+    ``times`` is the merged, sorted admission stream; ``fn_idx[i]`` indexes
+    ``specs`` for arrival i (a single-function stream is the all-zeros
+    case).  Arrivals inside one ``batch_window_s`` sub-window are admitted
+    together at the window's close; each invocation keeps its true arrival
+    timestamp, so measured response times include the admission delay.
+    """
+    sink = sink or ColumnarResultSink()
+    times = np.asarray(times, dtype=float)
+    fn_idx = np.asarray(fn_idx, dtype=np.int64)
+    if times.size == 0:
+        return sink
+    bounds = _burst_bounds(times, batch_window_s)
+
+    def fire(lo: int, hi: int):
+        invs = [Invocation(specs[fn_idx[i]], float(times[i]))
+                for i in range(lo, hi)]
+        sink.submitted += len(invs)
+        accepted = submit_batch(invs)
+        sink.rejected += len(invs) - accepted
+
+    clock.schedule_many([float(times[hi - 1]) for lo, hi in bounds],
+                        [lambda lo=lo, hi=hi: fire(lo, hi)
+                         for lo, hi in bounds])
+    return sink
+
+
+def run_arrival_mix(clock: SimClock,
+                    submit_batch: Callable[[List[Invocation]], int],
+                    specs: Sequence[FunctionSpec], times: np.ndarray,
+                    fn_idx: np.ndarray, batch_window_s: float = 0.05,
+                    sink: Optional[ColumnarResultSink] = None,
+                    drain_s: float = 120.0) -> ColumnarResultSink:
+    """Open-loop replay of a multi-function arrival mix, then drain."""
+    times = np.asarray(times, dtype=float)
+    sink = schedule_arrival_mix(clock, submit_batch, specs, times, fn_idx,
+                                batch_window_s, sink)
+    if times.size:
+        t_end = float(times[-1])
+        clock.run_until(t_end)
+        clock.run_until(t_end + drain_s)      # gracefulStop: drain in-flight
+    return sink
+
+
 def run_arrivals(clock: SimClock, submit_batch: Callable[[List[Invocation]],
                                                          int],
                  fn: FunctionSpec, arrivals: np.ndarray,
@@ -242,39 +383,14 @@ def run_arrivals(clock: SimClock, submit_batch: Callable[[List[Invocation]],
                  drain_s: float = 120.0) -> ColumnarResultSink:
     """Open-loop replay: admit ``arrivals`` through a batch-submit callable.
 
-    Arrivals inside one ``batch_window_s`` sub-window are admitted together
-    at the window's close (one policy evaluation per burst); each
-    invocation keeps its true arrival timestamp, so measured response
-    times include the admission delay.  With ``batch_window_s <= 0`` every
-    arrival is its own batch (the per-invocation baseline).
+    Single-function case of ``run_arrival_mix`` (one spec, all-zero
+    function indices).  With ``batch_window_s <= 0`` every arrival is its
+    own batch (the per-invocation baseline).
     """
-    sink = sink or ColumnarResultSink()
     arrivals = np.asarray(arrivals, dtype=float)
-    if arrivals.size == 0:
-        return sink
-    t_end = float(arrivals[-1])
-    if batch_window_s > 0:
-        edges = np.arange(float(arrivals[0]), t_end + batch_window_s,
-                          batch_window_s)
-        starts = np.searchsorted(arrivals, edges, side="left")
-        bounds = [(int(a), int(b)) for a, b in
-                  zip(starts, list(starts[1:]) + [arrivals.size]) if b > a]
-    else:
-        bounds = [(i, i + 1) for i in range(arrivals.size)]
-
-    def fire(lo: int, hi: int):
-        invs = [Invocation(fn, float(arrivals[i])) for i in range(lo, hi)]
-        sink.submitted += len(invs)
-        accepted = submit_batch(invs)
-        sink.rejected += len(invs) - accepted
-
-    times = [float(arrivals[hi - 1]) for lo, hi in bounds]
-    clock.schedule_many(times,
-                        [lambda lo=lo, hi=hi: fire(lo, hi)
-                         for lo, hi in bounds])
-    clock.run_until(t_end)
-    clock.run_until(t_end + drain_s)          # gracefulStop: drain in-flight
-    return sink
+    return run_arrival_mix(clock, submit_batch, [fn], arrivals,
+                           np.zeros(arrivals.size, np.int64),
+                           batch_window_s, sink, drain_s)
 
 
 def attach_completion_hooks(control_plane) -> None:

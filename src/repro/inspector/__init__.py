@@ -1,0 +1,31 @@
+"""FDNInspector (paper §5): the benchmarking subsystem that turns
+"benchmark the FDN" into data.
+
+    from repro.inspector import registry, run_scenario
+
+    report = run_scenario(registry.get("mix/five-platform"))
+    print(report.to_json())
+
+``scenario`` — declarative Scenario spec + runner + versioned
+ScenarioReport; ``traces`` — FaaS trace library (Azure minute counts,
+diurnal / MMPP / ramp generators, WorkloadMix); ``registry`` — named
+scenarios: the paper's figures/tables re-expressed, plus mixes the
+hand-wired benchmarks could not express.
+"""
+from repro.inspector.scenario import (SCHEMA_VERSION, FaultEvent, Scenario,
+                                      ScenarioReport, Workload, assemble,
+                                      build_report, run_scenario)
+from repro.inspector.traces import (WorkloadMix, build_arrivals,
+                                    counts_to_arrivals, diurnal_arrivals,
+                                    load_azure_invocations_csv,
+                                    mmpp_arrivals, ramp_arrivals,
+                                    synthetic_azure_counts)
+from repro.inspector import registry
+
+__all__ = [
+    "SCHEMA_VERSION", "FaultEvent", "Scenario", "ScenarioReport",
+    "Workload", "assemble", "build_report", "run_scenario",
+    "WorkloadMix", "build_arrivals", "counts_to_arrivals",
+    "diurnal_arrivals", "load_azure_invocations_csv", "mmpp_arrivals",
+    "ramp_arrivals", "synthetic_azure_counts", "registry",
+]

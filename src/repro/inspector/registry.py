@@ -1,0 +1,279 @@
+"""Scenario registry: the paper's figure/table experiments re-expressed as
+declarative FDNInspector scenarios, plus scenarios the hand-wired
+benchmarks could not express (multi-function mixes across five platforms,
+energy sweeps under diurnal load, MMPP burst storms, mid-run platform
+outages, overload ramps, Azure-style minute-count replay).
+
+``get(name)`` builds a fresh ``Scenario``; ``names()`` lists everything
+registered.  The parameterized ``fig5_cell`` / ``fig7_cell`` /
+``fig10_scenario`` / ``table4_cell`` builders are what the migrated
+``benchmarks/fig*.py`` modules iterate over.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.inspector import traces
+from repro.inspector.scenario import FaultEvent, Scenario, Workload
+
+PAPER_FIVE = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
+              "google-cloud-cluster", "edge-cluster")
+
+_BUILDERS: Dict[str, Callable[[], Scenario]] = {}
+
+
+def register(name: str, builder: Callable[[], Scenario]) -> None:
+    _BUILDERS[name] = builder
+
+
+def names() -> List[str]:
+    return sorted(_BUILDERS)
+
+
+def get(name: str) -> Scenario:
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"registered: {', '.join(names())}")
+    return _BUILDERS[name]()
+
+
+# ---------------------------------------------------------------------------
+# Paper experiments as scenario families (benchmarks/fig*.py iterate these)
+# ---------------------------------------------------------------------------
+
+def fig5_cell(platform: str, vus: int, duration_s: float = 120.0,
+              analytic: bool = False) -> Scenario:
+    """Fig. 5: nodeinfo, exclusive on one platform, closed-loop VUs."""
+    return Scenario(
+        name=f"fig5/nodeinfo/{platform}/vus{vus}",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("nodeinfo", mode="closed", vus=vus,
+                            sleep_s=0.05),),
+        duration_s=duration_s, platform_override=platform,
+        analytic=analytic)
+
+
+def fig7_cell(platform: str, function: str, duration_s: float = 120.0,
+              analytic: bool = False) -> Scenario:
+    """Fig. 7: function heterogeneity at 30 VUs on one platform."""
+    return Scenario(
+        name=f"fig7/{function}/{platform}/vus30",
+        platforms=PAPER_FIVE,
+        workloads=(Workload(function, mode="closed", vus=30,
+                            sleep_s=0.2),),
+        duration_s=duration_s, platform_override=platform,
+        analytic=analytic)
+
+
+def fig10_scenario(mode: str, duration_s: float = 120.0,
+                   analytic: bool = False) -> Scenario:
+    """Fig. 10: primes-python at 40 VUs over old-hpc + cloud — exclusive
+    arms or gateway collaboration (round-robin / weighted 5:1)."""
+    pair = ("old-hpc-node-cluster", "cloud-cluster")
+    wl = (Workload("primes-python", mode="closed", vus=40, sleep_s=0.05),)
+    base = dict(platforms=pair, workloads=wl, duration_s=duration_s,
+                analytic=analytic)
+    if mode in pair:
+        return Scenario(name=f"fig10/exclusive/{mode}",
+                        platform_override=mode, **base)
+    if mode == "round_robin":
+        return Scenario(name="fig10/round_robin", lb_policy="round_robin",
+                        **base)
+    if mode == "weighted":
+        return Scenario(name="fig10/weighted_5to1", lb_policy="weighted",
+                        lb_kwargs={"weights": {"old-hpc-node-cluster": 5,
+                                               "cloud-cluster": 1}},
+                        **base)
+    raise KeyError(f"unknown fig10 mode {mode!r}")
+
+
+def table4_cell(platform: str, duration_s: float = 600.0, rps: float = 40.0,
+                analytic: bool = False) -> Scenario:
+    """Table 4: JSON-loads at a fixed open-loop arrival rate, exclusive on
+    one platform, data local to that platform (energy comparison)."""
+    return Scenario(
+        name=f"table4/JSON-loads/{platform}",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("JSON-loads", mode="open",
+                            arrival={"kind": "uniform", "rps": rps}),),
+        duration_s=duration_s, platform_override=platform,
+        data_location=platform, batch_window_s=0.0, drain_s=60.0,
+        analytic=analytic)
+
+
+register("paper/fig5-hpc-vus20",
+         lambda: fig5_cell("hpc-node-cluster", 20, analytic=True))
+register("paper/fig7-primes-gcf",
+         lambda: fig7_cell("google-cloud-cluster", "primes-python",
+                           analytic=True))
+register("paper/fig10-weighted",
+         lambda: fig10_scenario("weighted", analytic=True))
+register("paper/table4-edge",
+         lambda: table4_cell("edge-cluster", analytic=True))
+register("paper/table4-hpc",
+         lambda: table4_cell("hpc-node-cluster", analytic=True))
+
+
+# ---------------------------------------------------------------------------
+# Beyond the hand-wired benchmarks
+# ---------------------------------------------------------------------------
+
+def five_platform_mix(duration_s: float = 120.0) -> Scenario:
+    """All five Table-2 functions as concurrent Poisson streams over all
+    five platforms under the production policy — the cross-function
+    interference case no per-figure benchmark could express."""
+    return Scenario(
+        name="mix/five-platform",
+        platforms=PAPER_FIVE,
+        workloads=(
+            Workload("nodeinfo",
+                     arrival={"kind": "poisson", "rps": 40.0}),
+            Workload("JSON-loads",
+                     arrival={"kind": "poisson", "rps": 25.0}),
+            Workload("image-processing",
+                     arrival={"kind": "poisson", "rps": 6.0}),
+            Workload("sentiment-analysis",
+                     arrival={"kind": "poisson", "rps": 4.0}),
+            Workload("primes-python",
+                     arrival={"kind": "poisson", "rps": 2.0}),
+        ),
+        duration_s=duration_s)
+
+
+def edge_vs_cloud_energy(duration_s: float = 600.0) -> Scenario:
+    """Table-4's question under realistic load: a diurnal JSON-loads cycle
+    over edge + hpc with the energy-aware policy free to choose."""
+    return Scenario(
+        name="energy/edge-vs-cloud-diurnal",
+        platforms=("edge-cluster", "hpc-node-cluster"),
+        workloads=(
+            Workload("JSON-loads",
+                     arrival={"kind": "diurnal", "mean_rps": 25.0,
+                              "period_s": 600.0, "peak_frac": 0.8}),
+            Workload("nodeinfo",
+                     arrival={"kind": "diurnal", "mean_rps": 10.0,
+                              "period_s": 600.0, "peak_frac": 0.8}),
+        ),
+        duration_s=duration_s, policy="energy_aware",
+        data_location="hpc-node-cluster")
+
+
+def burst_storm(duration_s: float = 120.0) -> Scenario:
+    """MMPP burst storm against ``submit_batch``: quiet baseline
+    punctuated by 600 rps bursts, admitted in 50 ms batched windows."""
+    return Scenario(
+        name="burst/mmpp-storm",
+        platforms=PAPER_FIVE,
+        workloads=(
+            Workload("nodeinfo",
+                     arrival={"kind": "mmpp", "base_rps": 30.0,
+                              "burst_rps": 600.0, "mean_quiet_s": 15.0,
+                              "mean_burst_s": 3.0}),
+            Workload("JSON-loads",
+                     arrival={"kind": "mmpp", "base_rps": 15.0,
+                              "burst_rps": 300.0, "mean_quiet_s": 20.0,
+                              "mean_burst_s": 2.0}),
+        ),
+        duration_s=duration_s)
+
+
+def platform_outage(duration_s: float = 120.0) -> Scenario:
+    """Mid-run outage of the fastest platform: hpc fails at t=40 s and
+    recovers at t=80 s while a mixed load keeps arriving (redelivery +
+    failure detector + elastic re-admission, §3.1.3)."""
+    return Scenario(
+        name="faults/hpc-outage",
+        platforms=("hpc-node-cluster", "cloud-cluster", "edge-cluster"),
+        workloads=(
+            Workload("nodeinfo",
+                     arrival={"kind": "poisson", "rps": 30.0}),
+            Workload("JSON-loads",
+                     arrival={"kind": "poisson", "rps": 10.0}),
+        ),
+        duration_s=duration_s,
+        faults=(FaultEvent(40.0, "hpc-node-cluster", "fail"),
+                FaultEvent(80.0, "hpc-node-cluster", "recover")))
+
+
+def ramp_overload(duration_s: float = 120.0) -> Scenario:
+    """Linear overload ramp on the two weakest platforms: the
+    sentiment-analysis arrival rate climbs past their aggregate capacity
+    (~70 rps), exposing queueing growth and the SLO-violation knee."""
+    return Scenario(
+        name="ramp/overload",
+        platforms=("cloud-cluster", "edge-cluster"),
+        workloads=(
+            Workload("sentiment-analysis",
+                     arrival={"kind": "ramp", "start_rps": 5.0,
+                              "end_rps": 160.0}),
+        ),
+        duration_s=duration_s,
+        slo_overrides={"sentiment-analysis": 2.0})
+
+
+def azure_replay(duration_s: float = 300.0) -> Scenario:
+    """Azure-Functions-style minute-count replay: three synthetic
+    per-minute count rows (diurnal-shaped, seeded) expanded to arrivals
+    and time-dilated so a 60-minute trace plays in 300 s."""
+    counts = traces.synthetic_azure_counts(
+        ["nodeinfo", "JSON-loads", "image-processing"], minutes=60,
+        mean_rpm=240.0, seed=11)
+    scale = duration_s / 3600.0
+    return Scenario(
+        name="azure/minute-replay",
+        platforms=PAPER_FIVE,
+        workloads=tuple(
+            Workload(fn, arrival={"kind": "azure",
+                                  "counts": counts[fn].tolist(),
+                                  "time_scale": scale,
+                                  "duration_s": duration_s})
+            for fn in counts),
+        duration_s=duration_s)
+
+
+def million_burst(n_target: int = 1_000_000) -> Scenario:
+    """Scale demonstration: ~10^6 invocations through the columnar
+    pipeline (Poisson mix at ~1700 rps over 600 s across five platforms).
+    Per-invocation survivors of the run are NumPy columns only — no
+    completed-Invocation list, no decision rows (``retain_objects`` stays
+    False).  Takes a minute or two of wall time; not part of CI."""
+    duration = 600.0
+    total_rps = n_target / duration
+    return Scenario(
+        name="scale/million-burst",
+        platforms=PAPER_FIVE,
+        workloads=(
+            Workload("nodeinfo",
+                     arrival={"kind": "poisson",
+                              "rps": 0.7 * total_rps}),
+            Workload("JSON-loads",
+                     arrival={"kind": "mmpp",
+                              "base_rps": 0.2 * total_rps,
+                              "burst_rps": 0.6 * total_rps,
+                              "mean_quiet_s": 20.0, "mean_burst_s": 5.0}),
+        ),
+        duration_s=duration)
+
+
+def smoke_tiny() -> Scenario:
+    """CI smoke: a 10-second two-platform mixed scenario (closed + open)
+    exercising every runner path in well under a second."""
+    return Scenario(
+        name="smoke/tiny",
+        platforms=("hpc-node-cluster", "cloud-cluster"),
+        workloads=(
+            Workload("nodeinfo",
+                     arrival={"kind": "poisson", "rps": 20.0}),
+            Workload("JSON-loads", mode="closed", vus=4, sleep_s=0.05),
+        ),
+        duration_s=10.0, drain_s=30.0)
+
+
+register("mix/five-platform", five_platform_mix)
+register("energy/edge-vs-cloud-diurnal", edge_vs_cloud_energy)
+register("burst/mmpp-storm", burst_storm)
+register("faults/hpc-outage", platform_outage)
+register("ramp/overload", ramp_overload)
+register("azure/minute-replay", azure_replay)
+register("scale/million-burst", million_burst)
+register("smoke/tiny", smoke_tiny)

@@ -1,0 +1,356 @@
+"""FDNInspector scenarios: "benchmark the FDN" as data (paper §5).
+
+A ``Scenario`` is a declarative spec — platforms, per-function workload
+mix (closed-loop VUs and/or open-loop arrival streams), scheduling policy,
+SLO overrides, fault schedule, seed, duration — and ``run_scenario``
+assembles the control plane, drives everything on one SimClock, and emits
+a versioned ``ScenarioReport``: per-platform / per-function p50/p90/p99,
+SLO-violation rate, cold starts, energy, decisions per simulated second.
+
+Reports are reproducible artifacts: with ``analytic=True`` (the default;
+execution cost from the analytic model, no wall-clock measurement) two
+runs of the same scenario produce byte-identical canonical JSON on any
+machine.  Completions stream into a ``ColumnarResultSink`` and are bulk-
+ingested into the metrics registry at the end of the run
+(``MetricsRegistry.record_completions``), so a 10^6-invocation scenario
+never touches a per-sample Python hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import functions as fn_mod
+from repro.core import profiles as prof_mod
+from repro.core.control_plane import FDNControlPlane
+from repro.core.gateway import Gateway
+from repro.core.loadgen import (ColumnarResultSink, attach_completion_hooks,
+                                schedule_arrival_mix, spawn_vus)
+from repro.core.monitoring import percentile_unsorted
+from repro.core.scheduler import (DataLocalityPolicy, EnergyAwarePolicy,
+                                  PerformanceRankedPolicy,
+                                  RoundRobinCollaboration,
+                                  SLOCompositePolicy,
+                                  UtilizationAwarePolicy,
+                                  WeightedCollaboration)
+from repro.core.types import SLO, DeploymentSpec, Invocation
+from repro.inspector import traces
+
+SCHEMA_VERSION = 1
+
+REMOTE_STORE = "gcp-us-east"
+REMOTE_BW = 2e6                 # WAN Germany <-> us-east (Fig. 11)
+
+IMAGE_KEY = "images/sample.jpg"
+JSON_KEY = "json/coords.json"
+
+
+# ---------------------------------------------------------------------------
+# Declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Workload:
+    """One load stream of the mix.
+
+    ``mode="open"``: ``arrival`` is a ``traces.build_arrivals`` spec dict
+    (seeded per workload: scenario seed + stream index).
+    ``mode="closed"``: ``vus`` k6-style virtual users with ``sleep_s``
+    think time."""
+    function: str
+    mode: str = "open"                       # "open" | "closed"
+    arrival: Optional[Dict[str, Any]] = None
+    vus: int = 0
+    sleep_s: float = 0.0
+    jitter: float = 0.05
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """Scheduled platform outage / recovery (§3.1.3 fault tolerance)."""
+    t: float
+    platform: str
+    action: str                              # "fail" | "recover"
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    platforms: Tuple[str, ...]
+    workloads: Tuple[Workload, ...]
+    duration_s: float
+    policy: str = "slo_composite"            # scheduler.POLICIES key
+    policy_kwargs: Dict[str, Any] = field(default_factory=dict)
+    lb_policy: Optional[str] = None          # collaboration at the gateway
+    lb_kwargs: Dict[str, Any] = field(default_factory=dict)
+    platform_override: Optional[str] = None  # exclusive per-platform runs
+    data_location: str = "cloud-cluster"
+    seed: int = 42
+    analytic: bool = True                    # strip real JAX callables
+    batch_window_s: float = 0.05
+    drain_s: float = 120.0
+    faults: Tuple[FaultEvent, ...] = ()
+    slo_overrides: Dict[str, float] = field(default_factory=dict)
+    defer_metrics: bool = True               # bulk-ingest completions
+    retain_objects: bool = False             # keep per-invocation lists
+    enable_hedging: bool = False
+    predictive_prewarm: bool = False
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+
+def _make_policy(name: str, kwargs: Dict[str, Any], cp: FDNControlPlane):
+    kw = dict(kwargs or {})
+    if name == "perf_ranked":
+        return PerformanceRankedPolicy(cp.perf)
+    if name == "utilization_aware":
+        return UtilizationAwarePolicy(cp.perf, **kw)
+    if name == "round_robin":
+        return RoundRobinCollaboration()
+    if name == "weighted":
+        return WeightedCollaboration(kw.get("weights", {}))
+    if name == "data_locality":
+        return DataLocalityPolicy(cp.perf, cp.placement)
+    if name == "energy_aware":
+        return EnergyAwarePolicy(cp.perf)
+    if name == "slo_composite":
+        return SLOCompositePolicy(cp.perf, cp.placement, **kw)
+    raise KeyError(f"unknown policy {name!r}")
+
+
+PLATFORM_CATALOG: Dict[str, Any] = {**prof_mod.PAPER_PLATFORMS,
+                                    **prof_mod.TPU_PLATFORMS}
+
+
+def assemble(sc: Scenario):
+    """Build the control plane a scenario describes (mirrors the harness
+    every hand-wired benchmark used to copy: five-platform FDN, Table-2
+    functions, seeded MinIO stores, remote us-east replica)."""
+    cp = FDNControlPlane(enable_hedging=sc.enable_hedging,
+                         predictive_prewarm=sc.predictive_prewarm,
+                         retain_completions=sc.retain_objects)
+    # without retain_objects the only per-invocation survivors of a run
+    # are the sink's NumPy columns (no completed-Invocation list, no
+    # knowledge-base decision rows — counters only)
+    cp.kb.log_decisions = sc.retain_objects
+    cp.policy = _make_policy(sc.policy, sc.policy_kwargs, cp)
+    for name in sc.platforms:
+        cp.create_platform(PLATFORM_CATALOG[name])
+    fns = fn_mod.paper_functions(IMAGE_KEY, JSON_KEY)
+    if sc.analytic:
+        fns = {k: f.replace(real_fn=None) for k, f in fns.items()}
+    for fname, p90_s in sc.slo_overrides.items():
+        fns[fname] = fns[fname].replace(slo=SLO(p90_response_s=p90_s))
+    fn_mod.seed_object_stores(cp.placement, IMAGE_KEY, JSON_KEY,
+                              location=sc.data_location)
+    cp.placement.add_store(REMOTE_STORE)
+    fn_mod.seed_object_stores(cp.placement, IMAGE_KEY, JSON_KEY,
+                              location=REMOTE_STORE)
+    for name in sc.platforms:
+        cp.placement.set_bandwidth(name, REMOTE_STORE, REMOTE_BW)
+    cp.deploy(DeploymentSpec(sc.name, list(fns.values()),
+                             list(sc.platforms)))
+    attach_completion_hooks(cp)
+    gw = Gateway(cp)
+    if sc.lb_policy is not None:
+        gw.lb_policy = _make_policy(sc.lb_policy, sc.lb_kwargs, cp)
+    sink = ColumnarResultSink().install(cp)
+    if sc.defer_metrics:
+        cp.metrics.defer_completions = True
+    return cp, gw, fns, sink
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ScenarioReport:
+    schema_version: int
+    scenario: Dict[str, Any]
+    totals: Dict[str, Any]
+    per_platform: Dict[str, Dict[str, Any]]
+    per_function: Dict[str, Dict[str, Any]]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        """Canonical serialization: sorted keys, no whitespace — two runs
+        of one scenario must produce byte-identical strings."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    REQUIRED_TOTALS = ("submitted", "completed", "rejected", "cold_starts",
+                       "slo_violations", "slo_violation_rate", "decisions",
+                       "decisions_per_sim_s", "sim_duration_s",
+                       "energy_wh")
+    REQUIRED_STATS = ("completed", "mean_s", "p50_s", "p90_s", "p99_s")
+
+    @classmethod
+    def validate(cls, d: Dict[str, Any]) -> None:
+        """Schema check for CI smoke tests; raises ValueError on drift."""
+        if d.get("schema_version") != SCHEMA_VERSION:
+            raise ValueError(f"schema_version != {SCHEMA_VERSION}: "
+                             f"{d.get('schema_version')!r}")
+        for section in ("scenario", "totals", "per_platform",
+                        "per_function"):
+            if not isinstance(d.get(section), dict):
+                raise ValueError(f"missing section {section!r}")
+        for k in cls.REQUIRED_TOTALS:
+            if k not in d["totals"]:
+                raise ValueError(f"totals missing {k!r}")
+        for section in ("per_platform", "per_function"):
+            for name, stats in d[section].items():
+                for k in cls.REQUIRED_STATS:
+                    if k not in stats:
+                        raise ValueError(
+                            f"{section}[{name!r}] missing {k!r}")
+
+
+def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
+    return {
+        "completed": int(rt.size),
+        "mean_s": float(rt.mean()) if rt.size else float("nan"),
+        "p50_s": percentile_unsorted(rt, 0.50),
+        "p90_s": percentile_unsorted(rt, 0.90),
+        "p99_s": percentile_unsorted(rt, 0.99),
+        "rps": rt.size / max(duration_s, 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_scenario(sc: Scenario) -> ScenarioReport:
+    cp, gw, fns, sink = assemble(sc)
+    clock = cp.clock
+
+    for ev in sc.faults:
+        p = cp.platforms[ev.platform]
+        clock.schedule(ev.t, p.fail if ev.action == "fail" else p.recover)
+
+    if sc.platform_override is not None:
+        po = sc.platform_override
+
+        def submit(inv: Invocation) -> bool:
+            return cp.submit(inv, platform_override=po)
+
+        def submit_batch(invs: List[Invocation]) -> int:
+            return cp.submit_batch(invs, platform_override=po)
+    else:
+        submit, submit_batch = gw.request, gw.request_batch
+
+    # one derived seed per load stream: deterministic, decorrelated
+    closed_out: List[Invocation] = []
+    mix = traces.WorkloadMix()
+    for i, w in enumerate(sc.workloads):
+        stream_seed = sc.seed + 7919 * i
+        if w.mode == "closed":
+            spawn_vus(clock, submit, fns[w.function], w.vus,
+                      t_end=sc.duration_s, sleep_s=w.sleep_s,
+                      seed=stream_seed, jitter=w.jitter, out=closed_out)
+        elif w.mode == "open":
+            if w.arrival is None:
+                raise ValueError(f"open workload {w.function!r} "
+                                 "needs an arrival spec")
+            mix.add(w.function,
+                    traces.build_arrivals(w.arrival, sc.duration_s,
+                                          seed=stream_seed))
+        else:
+            raise ValueError(f"unknown workload mode {w.mode!r}")
+
+    times, fn_idx, names = mix.merge()
+    specs = [fns[n] for n in names]
+    schedule_arrival_mix(clock, submit_batch, specs, times, fn_idx,
+                         sc.batch_window_s, sink)
+
+    t_end = max(sc.duration_s,
+                float(times[-1]) if times.size else 0.0)
+    clock.run_until(t_end)
+    clock.run_until(t_end + sc.drain_s)      # gracefulStop
+    cp.run_until(clock.now())                # flush energy integrators
+
+    visible = {name: p.prof.infra_metrics_visible
+               for name, p in cp.platforms.items()}
+    if sc.defer_metrics:
+        cp.metrics.defer_completions = False
+        cp.metrics.record_completions(sink, visible_infra=visible)
+
+    return build_report(sc, cp, fns, sink,
+                        closed_submitted=len(closed_out))
+
+
+def build_report(sc: Scenario, cp: FDNControlPlane, fns,
+                 sink: ColumnarResultSink,
+                 closed_submitted: int = 0) -> ScenarioReport:
+    cols = sink.completion_columns()
+    rt = cols["end"] - cols["arrival"]
+    plat_col, fn_col, cold = cols["platform"], cols["fn"], cols["cold"]
+
+    # SLO thresholds broadcast per completion via the fn-id column
+    slo_by_fid = np.full(max(len(cols["fn_ids"]), 1), np.inf)
+    for fname, fid in cols["fn_ids"].items():
+        slo_by_fid[fid] = fns[fname].slo.p90_response_s
+    violated = rt > slo_by_fid[fn_col] if rt.size else \
+        np.empty(0, bool)
+
+    per_platform: Dict[str, Dict[str, Any]] = {}
+    for pname in sc.platforms:
+        pid = cols["platform_ids"].get(pname)
+        mask = (plat_col == pid) if pid is not None else \
+            np.zeros(rt.size, bool)
+        stats = _pct_stats(rt[mask], sc.duration_s)
+        stats["cold_starts"] = int(cold[mask].sum())
+        stats["slo_violations"] = int(violated[mask].sum())
+        joules = cp.energy.joules(pname)
+        stats["energy_j"] = float(joules)
+        stats["energy_wh"] = float(joules) / 3600.0
+        per_platform[pname] = stats
+
+    per_function: Dict[str, Dict[str, Any]] = {}
+    for fname, fid in cols["fn_ids"].items():
+        mask = fn_col == fid
+        stats = _pct_stats(rt[mask], sc.duration_s)
+        stats["cold_starts"] = int(cold[mask].sum())
+        n_violated = int(violated[mask].sum())
+        stats["slo_violations"] = n_violated
+        stats["slo_violation_rate"] = (n_violated / int(mask.sum())
+                                       if mask.any() else 0.0)
+        stats["slo_s"] = float(fns[fname].slo.p90_response_s)
+        per_function[fname] = stats
+
+    submitted = sink.submitted + closed_submitted
+    rejected = cp.rejected_count
+    n_violations = int(violated.sum()) + rejected
+    decisions = cp.kb.decision_count
+    totals = {
+        "submitted": submitted,
+        "completed": sink.completed,
+        "rejected": rejected,
+        "cold_starts": int(cold.sum()),
+        "slo_violations": n_violations,
+        "slo_violation_rate": n_violations / max(submitted, 1),
+        "decisions": decisions,
+        "decisions_per_sim_s": decisions / max(sc.duration_s, 1e-9),
+        "sim_duration_s": float(sc.duration_s),
+        "energy_wh": float(sum(p["energy_wh"]
+                               for p in per_platform.values())),
+        "redelivered": cp.redeliverer.redelivered,
+        "hedges_sent": cp.hedge.hedges_sent,
+    }
+    totals.update(_pct_stats(rt, sc.duration_s))
+
+    return ScenarioReport(schema_version=SCHEMA_VERSION,
+                          scenario=sc.to_dict(), totals=totals,
+                          per_platform=per_platform,
+                          per_function=per_function)

@@ -229,6 +229,57 @@ def test_sink_to_metrics_bulk_ingest():
     assert ws.p90() == pytest.approx(sink.p90_response())
 
 
+def test_vu_not_duplicated_when_failed_submit_also_fires_on_done():
+    """Regression: the failed-submit fallback in the VU loop used to
+    reschedule without checking done_flag, so a platform that both failed
+    an invocation AND later fired _on_done (redelivery, hedging) forked
+    the virtual user — VU count grew without bound."""
+    from repro.core.loadgen import run_load
+    from repro.core.simulator import SimClock
+    from repro.core import functions
+
+    fn = functions.paper_functions()["nodeinfo"].replace(real_fn=None)
+    clock = SimClock()
+    submitted = []
+
+    def submit(inv):
+        # fail the submit synchronously AND complete it later anyway
+        submitted.append(inv)
+        inv.status = "failed"
+
+        def late_done():
+            cb = getattr(inv, "_on_done", None)
+            if cb is not None:
+                cb()
+
+        clock.after(0.05, late_done)
+
+    res = run_load(clock, submit, fn, vus=1, duration_s=2.0,
+                   sleep_s=0.1, seed=1, jitter=0.0, drain_s=1.0)
+    # one VU iterating every ~0.1 s (fallback) for 2 s: ~20 invocations.
+    # with the double-spawn bug the VU forks every iteration -> ~2^20.
+    assert len(res.invocations) <= 25
+    assert len(submitted) == len(res.invocations)
+
+
+def test_run_open_loop_wrapper_equivalent():
+    """run_open_loop is now a thin wrapper over uniform_arrivals +
+    run_arrivals; it must keep its LoadResult contract and serve the
+    offered load."""
+    from repro.core.loadgen import run_open_loop
+
+    cp, fns = build(names=["hpc-node-cluster"])
+    res = run_open_loop(
+        cp.clock,
+        lambda inv: cp.submit(inv, platform_override="hpc-node-cluster"),
+        fns["nodeinfo"], rps=20.0, duration_s=10.0)
+    assert len(res.invocations) == 200
+    assert len(res.completed) == 200
+    arrivals = sorted(i.arrival_t for i in res.invocations)
+    np.testing.assert_allclose(arrivals, np.arange(200) / 20.0)
+    assert res.p90_response() < 2.0
+
+
 def test_invoke_batch_matches_sequential_invokes():
     cp_a, fns_a = build(names=["cloud-cluster"])
     cp_b, fns_b = build(names=["cloud-cluster"])

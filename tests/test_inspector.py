@@ -1,0 +1,289 @@
+"""FDNInspector scenario subsystem: report determinism (byte-identical
+JSON), parity with the hand-wired benchmark harness, the columnar metrics
+pipeline, fault schedules, and the scenario registry."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (FDNControlPlane, Gateway, Invocation,
+                        MetricsRegistry)
+from repro.core import functions as fn_mod
+from repro.core import profiles as prof_mod
+from repro.core.loadgen import (ColumnarResultSink, attach_completion_hooks,
+                                run_load, run_open_loop)
+from repro.core.monitoring import (ColumnarWindowSeries, WindowSeries,
+                                   percentile, percentile_unsorted)
+from repro.core.types import DeploymentSpec, FunctionSpec
+from repro.inspector import (FaultEvent, Scenario, ScenarioReport,
+                             Workload, registry, run_scenario)
+
+PAIR = ("hpc-node-cluster", "cloud-cluster")
+
+
+def tiny_scenario(**kw):
+    base = dict(
+        name="test/tiny",
+        platforms=PAIR,
+        workloads=(Workload("nodeinfo",
+                            arrival={"kind": "poisson", "rps": 25.0}),
+                   Workload("JSON-loads", mode="closed", vus=3,
+                            sleep_s=0.05)),
+        duration_s=8.0, drain_s=20.0)
+    base.update(kw)
+    return Scenario(**base)
+
+
+# ---------------------------------------------------------------- report --
+
+def test_report_byte_identical_and_valid():
+    a = run_scenario(tiny_scenario())
+    b = run_scenario(tiny_scenario())
+    ja, jb = a.to_json(), b.to_json()
+    assert ja == jb
+    ScenarioReport.validate(json.loads(ja))
+    assert a.totals["completed"] > 0
+    assert a.totals["submitted"] >= a.totals["completed"]
+
+
+def test_report_sections_consistent():
+    rep = run_scenario(tiny_scenario())
+    per_p = sum(s["completed"] for s in rep.per_platform.values())
+    per_f = sum(s["completed"] for s in rep.per_function.values())
+    assert per_p == per_f == rep.totals["completed"]
+    assert set(rep.per_platform) == set(PAIR)
+    for s in rep.per_function.values():
+        assert 0.0 <= s["slo_violation_rate"] <= 1.0
+    assert rep.totals["energy_wh"] == pytest.approx(
+        sum(s["energy_wh"] for s in rep.per_platform.values()))
+
+
+def test_seed_changes_report():
+    a = run_scenario(tiny_scenario())
+    b = run_scenario(tiny_scenario(seed=43))
+    assert a.to_json() != b.to_json()
+
+
+def test_validate_rejects_drift():
+    rep = run_scenario(registry.get("smoke/tiny"))
+    d = json.loads(rep.to_json())
+    ScenarioReport.validate(d)
+    bad = dict(d, schema_version=99)
+    with pytest.raises(ValueError):
+        ScenarioReport.validate(bad)
+    bad = {k: v for k, v in d.items() if k != "per_function"}
+    with pytest.raises(ValueError):
+        ScenarioReport.validate(bad)
+
+
+# -------------------------------------------------------------- registry --
+
+def test_registry_lists_and_builds():
+    names = registry.names()
+    assert len(names) >= 10
+    sc = registry.get("mix/five-platform")
+    assert isinstance(sc, Scenario) and len(sc.workloads) == 5
+    with pytest.raises(KeyError):
+        registry.get("does/not-exist")
+
+
+def test_registry_builders_are_fresh():
+    assert registry.get("smoke/tiny") == registry.get("smoke/tiny")
+
+
+# ---------------------------------------------------- hand-wired parity ---
+
+def _hand_wired_fdn(data_location="cloud-cluster"):
+    """The pre-inspector benchmark harness, verbatim (fdn_common.build_fdn
+    semantics with analytic functions)."""
+    cp = FDNControlPlane()
+    for name in prof_mod.PAPER_PLATFORMS:
+        cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
+    fns = {k: f.replace(real_fn=None)
+           for k, f in fn_mod.paper_functions().items()}
+    fn_mod.seed_object_stores(cp.placement, location=data_location)
+    cp.placement.add_store("gcp-us-east")
+    fn_mod.seed_object_stores(cp.placement, location="gcp-us-east")
+    for name in cp.platforms:
+        cp.placement.set_bandwidth(name, "gcp-us-east", 2e6)
+    cp.deploy(DeploymentSpec("hand", list(fns.values()),
+                             list(cp.platforms)))
+    attach_completion_hooks(cp)
+    return cp, fns
+
+
+def test_fig5_cell_matches_hand_wired_closed_loop():
+    """A fig5 cell through the scenario runner must equal the hand-wired
+    run_load drive exactly (same seeds, same clock, same decisions)."""
+    duration, vus, pname = 30.0, 10, "hpc-node-cluster"
+    cp, fns = _hand_wired_fdn()
+    res = run_load(cp.clock,
+                   lambda inv: cp.submit(inv, platform_override=pname),
+                   fns["nodeinfo"], vus, duration, sleep_s=0.05, seed=42)
+    comp = res.completed
+
+    rep = run_scenario(registry.fig5_cell(pname, vus, duration,
+                                          analytic=True))
+    stats = rep.per_platform[pname]
+    assert stats["completed"] == len(comp)
+    assert stats["p90_s"] == pytest.approx(res.p90_response(), rel=1e-12)
+    want_mean = sum(i.response_time for i in comp) / len(comp)
+    assert stats["mean_s"] == pytest.approx(want_mean, rel=1e-12)
+
+
+def test_table4_cell_matches_hand_wired_open_loop():
+    """The table4 energy cell must reproduce the hand-wired run_open_loop
+    numbers (served load, P90, energy) within tight tolerance."""
+    duration, rps, pname = 60.0, 20.0, "edge-cluster"
+    cp, fns = _hand_wired_fdn(data_location=pname)
+    res = run_open_loop(cp.clock,
+                        lambda inv: cp.submit(inv, platform_override=pname),
+                        fns["JSON-loads"], rps, duration)
+    cp.run_until(cp.clock.now())
+    joules = cp.energy.joules(pname)
+
+    rep = run_scenario(registry.table4_cell(pname, duration, rps,
+                                            analytic=True))
+    stats = rep.per_platform[pname]
+    assert stats["completed"] == len(res.completed)
+    assert stats["p90_s"] == pytest.approx(res.p90_response(), rel=1e-9)
+    assert stats["energy_j"] == pytest.approx(joules, rel=0.02)
+
+
+# ------------------------------------------------- columnar metrics path --
+
+def _random_samples(n=4000, seed=3):
+    rng = np.random.default_rng(seed)
+    ts = rng.uniform(0.0, 200.0, n)
+    vs = rng.exponential(0.5, n)
+    return ts, vs
+
+
+def test_columnar_window_series_matches_window_series():
+    ts, vs = _random_samples()
+    ws, cw = WindowSeries(10.0), ColumnarWindowSeries(10.0)
+    for t, v in zip(ts[:100], vs[:100]):      # scalar path
+        ws.add(t, v)
+        cw.add(t, v)
+    ws.add_many(ts[100:], vs[100:])           # bulk path
+    cw.add_many(ts[100:], vs[100:])
+    assert cw.count() == ws.count()
+    assert cw.total() == pytest.approx(ws.total())
+    assert cw.windows() == ws.windows()
+    assert cw.p90() == pytest.approx(ws.p90())
+    for agg in ("sum", "mean", "count", "p90"):
+        a, b = cw.series(agg), ws.series(agg)
+        assert len(a) == len(b)
+        for (t1, v1), (t2, v2) in zip(a, b):
+            assert t1 == t2 and v1 == pytest.approx(v2)
+    assert sorted(cw.all_values()) == pytest.approx(
+        sorted(ws.all_values()))
+
+
+def test_percentile_unsorted_matches_percentile():
+    rng = np.random.default_rng(1)
+    for n in (1, 2, 7, 100):
+        vals = rng.normal(size=n)
+        for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+            assert percentile_unsorted(vals, q) == pytest.approx(
+                percentile(np.sort(vals), q), abs=1e-12)
+    assert np.isnan(percentile_unsorted(np.empty(0), 0.9))
+
+
+def test_record_completions_matches_per_sample_record_completion():
+    """Bulk sink ingest must produce the same registry state as the old
+    per-invocation record_completion loop."""
+    fns = [FunctionSpec(name="f1", flops=1e6, memory_mb=128),
+           FunctionSpec(name="f2", flops=1e7, read_bytes=5e4,
+                        memory_mb=256)]
+    rng = np.random.default_rng(5)
+    n = 500
+    plat_names = ["pA", "pB"]
+    sink = ColumnarResultSink()
+    per_sample = MetricsRegistry(columnar=False)
+    for i in range(n):
+        inv = Invocation(fns[int(rng.integers(0, 2))],
+                         float(rng.uniform(0, 100)))
+        inv.platform = plat_names[int(rng.integers(0, 2))]
+        inv.end_t = inv.arrival_t + float(rng.exponential(0.3))
+        inv.exec_time = float(rng.uniform(0.01, 0.2))
+        inv.cold_start = bool(rng.random() < 0.1)
+        inv.status = "done"
+        sink.record_completion(inv)
+        per_sample.record_completion(inv, visible_infra=inv.platform ==
+                                     "pA")
+    bulk = MetricsRegistry()
+    bulk.record_completions(sink, visible_infra={"pA": True, "pB": False})
+    for p in plat_names:
+        for f in ("f1", "f2"):
+            for m in ("requests", "invocations", "cold_starts",
+                      "exec_time", "memory_mb", "disk_io",
+                      "response_time"):
+                assert bulk.total(p, f, m) == pytest.approx(
+                    per_sample.total(p, f, m)), (p, f, m)
+        assert bulk.p90_response(p) == pytest.approx(
+            per_sample.p90_response(p))
+        assert bulk.requests_served(p) == per_sample.requests_served(p)
+
+
+def test_deferred_metrics_report_equals_inline():
+    """defer_metrics=True (bulk ingest at end of run) must not change the
+    report relative to inline per-completion recording."""
+    a = run_scenario(tiny_scenario())
+    b = run_scenario(tiny_scenario(defer_metrics=False))
+    da, db = json.loads(a.to_json()), json.loads(b.to_json())
+    del da["scenario"], db["scenario"]        # spec differs by the flag
+    assert da == db
+
+
+def test_no_per_invocation_retention_on_hot_path():
+    """With retain_objects=False (the default) the only per-invocation
+    survivors of a run are the sink's NumPy columns: no completed-
+    Invocation list, no knowledge-base decision rows — counters only."""
+    from repro.inspector.scenario import assemble
+    from repro.core.loadgen import run_arrivals, poisson_arrivals
+
+    sc = tiny_scenario(workloads=(
+        Workload("nodeinfo", arrival={"kind": "poisson", "rps": 30.0}),))
+    cp, gw, fns, sink = assemble(sc)
+    run_arrivals(cp.clock, gw.request_batch, fns["nodeinfo"],
+                 poisson_arrivals(30.0, 8.0, seed=42), sink=sink)
+    assert sink.completed > 0
+    assert cp.completed == [] and cp.completed_count == sink.completed
+    assert cp.rejected == [] and cp.rejected_count == 0
+    assert cp.kb.decisions == []
+    assert cp.kb.decision_count == sink.completed
+    # registry series are NumPy-backed, not per-window Python lists
+    for ws in cp.metrics._m.values():
+        assert not hasattr(ws, "values")
+
+
+# ----------------------------------------------------- faults & overrides -
+
+def test_fault_schedule_survives_outage():
+    rep = run_scenario(registry.get("faults/hpc-outage").replace(
+        duration_s=60.0,
+        faults=(FaultEvent(20.0, "hpc-node-cluster", "fail"),)))
+    # the outage loses in-flight work but the FDN keeps serving
+    assert rep.totals["completed"] > 0
+    assert rep.per_platform["cloud-cluster"]["completed"] > 0
+    # hpc took traffic before failing, then stopped
+    assert rep.per_platform["hpc-node-cluster"]["completed"] > 0
+
+
+def test_slo_override_applies():
+    rep = run_scenario(tiny_scenario(
+        slo_overrides={"nodeinfo": 0.001}))
+    f = rep.per_function["nodeinfo"]
+    assert f["slo_s"] == 0.001
+    assert f["slo_violation_rate"] > 0.5
+
+
+def test_platform_override_routes_exclusively():
+    rep = run_scenario(tiny_scenario(
+        platform_override="cloud-cluster",
+        workloads=(Workload("nodeinfo",
+                            arrival={"kind": "poisson", "rps": 10.0}),)))
+    assert rep.per_platform["cloud-cluster"]["completed"] == \
+        rep.totals["completed"] > 0
+    assert rep.per_platform["hpc-node-cluster"]["completed"] == 0

@@ -1,0 +1,126 @@
+"""FDNInspector trace library: seed determinism, monotonic non-negative
+timestamps, time_scale dilation, WorkloadMix merge invariants, Azure CSV
+loading, declarative dispatch."""
+import numpy as np
+import pytest
+
+from repro.core.loadgen import trace_arrivals
+from repro.inspector import traces
+
+GENERATORS = {
+    "poisson": lambda seed: traces.build_arrivals(
+        {"kind": "poisson", "rps": 30.0}, 40.0, seed=seed),
+    "diurnal": lambda seed: traces.diurnal_arrivals(
+        20.0, 60.0, seed=seed, period_s=60.0, peak_frac=0.8),
+    "mmpp": lambda seed: traces.mmpp_arrivals(
+        10.0, 200.0, 60.0, seed=seed, mean_quiet_s=10.0, mean_burst_s=2.0),
+    "ramp": lambda seed: traces.ramp_arrivals(2.0, 50.0, 60.0, seed=seed),
+    "azure": lambda seed: traces.counts_to_arrivals(
+        [5, 0, 17, 3, 40], minute_s=60.0, seed=seed),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(GENERATORS))
+def test_generators_deterministic_and_well_formed(kind):
+    gen = GENERATORS[kind]
+    a, b, c = gen(7), gen(7), gen(8)
+    np.testing.assert_array_equal(a, b)          # same seed -> identical
+    assert a.size != c.size or not np.array_equal(a, c)  # seed matters
+    assert a.size > 0
+    assert np.all(a >= 0.0)
+    assert np.all(np.diff(a) >= 0.0)             # monotonic non-decreasing
+
+
+def test_generator_rates_roughly_match():
+    d = traces.diurnal_arrivals(20.0, 600.0, seed=1, period_s=600.0)
+    assert 0.6 * 12000 <= d.size <= 1.4 * 12000
+    r = traces.ramp_arrivals(0.0, 100.0, 100.0, seed=1)
+    # linear 0 -> 100 rps over 100 s integrates to ~5000 arrivals
+    assert 0.6 * 5000 <= r.size <= 1.4 * 5000
+    # ramp density grows: second half must hold well over half the mass
+    assert (r > 50.0).sum() > 0.6 * r.size
+
+
+def test_time_scale_dilation():
+    times = [0.0, 10.0, 30.0, 60.0]
+    half = trace_arrivals(times, time_scale=0.5)
+    np.testing.assert_allclose(half, [0.0, 5.0, 15.0, 30.0])
+    counts = [10, 0, 25]
+    full = traces.counts_to_arrivals(counts, seed=3)
+    fast = traces.counts_to_arrivals(counts, seed=3, time_scale=0.25)
+    assert full.size == fast.size == 35
+    np.testing.assert_allclose(fast, full * 0.25)
+
+
+def test_counts_to_arrivals_minute_buckets():
+    counts = [4, 0, 9]
+    t = traces.counts_to_arrivals(counts, minute_s=60.0, seed=5)
+    assert t.size == 13
+    per_minute = np.bincount((t // 60.0).astype(int), minlength=3)
+    np.testing.assert_array_equal(per_minute, counts)
+
+
+def test_workload_mix_preserves_counts_and_order():
+    rng = np.random.default_rng(0)
+    mix = traces.WorkloadMix()
+    streams = {"a": np.sort(rng.uniform(0, 50, 200)),
+               "b": np.sort(rng.uniform(0, 50, 120)),
+               "c": np.sort(rng.uniform(0, 50, 77))}
+    for name, arr in streams.items():
+        mix.add(name, arr)
+    times, idx, names = mix.merge()
+    assert names == ["a", "b", "c"]
+    assert times.size == idx.size == 397
+    assert np.all(np.diff(times) >= 0.0)          # global sort order
+    for name, arr in streams.items():             # per-function counts
+        fid = names.index(name)
+        assert int((idx == fid).sum()) == arr.size
+        np.testing.assert_allclose(np.sort(times[idx == fid]), arr)
+    assert mix.counts() == {k: v.size for k, v in streams.items()}
+
+
+def test_workload_mix_stable_ties_and_same_fn_merge():
+    mix = traces.WorkloadMix()
+    mix.add("x", [1.0, 2.0]).add("y", [1.0]).add("x", [1.0])
+    times, idx, names = mix.merge()
+    assert names == ["x", "y"]
+    np.testing.assert_allclose(times, [1.0, 1.0, 1.0, 2.0])
+    # stable: stream insertion order preserved among the t=1.0 ties
+    assert idx.tolist() == [0, 1, 0, 0]
+    assert mix.counts() == {"x": 3, "y": 1}
+
+
+def test_load_azure_invocations_csv(tmp_path):
+    p = tmp_path / "invocations.csv"
+    p.write_text(
+        "HashOwner,HashApp,HashFunction,Trigger,1,2,3\n"
+        "o1,a1,fnA,http,3,0,5\n"
+        "o1,a1,fnB,timer,1,1,1\n"
+        "o2,a2,fnA,http,2,0,0\n")
+    counts = traces.load_azure_invocations_csv(str(p))
+    np.testing.assert_array_equal(counts["fnA"], [5.0, 0.0, 5.0])
+    np.testing.assert_array_equal(counts["fnB"], [1.0, 1.0, 1.0])
+    t = traces.counts_to_arrivals(counts["fnA"], seed=0)
+    assert t.size == 10
+
+
+def test_synthetic_azure_counts_deterministic():
+    a = traces.synthetic_azure_counts(["f", "g"], minutes=30, seed=2)
+    b = traces.synthetic_azure_counts(["f", "g"], minutes=30, seed=2)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+        assert a[k].size == 30 and np.all(a[k] >= 0)
+
+
+def test_build_arrivals_dispatch_and_unknown_kind():
+    u = traces.build_arrivals({"kind": "uniform", "rps": 10.0}, 5.0)
+    assert u.size == 50
+    tr = traces.build_arrivals(
+        {"kind": "trace", "times": [3.0, 1.0], "time_scale": 2.0}, 5.0)
+    np.testing.assert_allclose(tr, [0.0, 4.0])
+    with pytest.raises(KeyError):
+        traces.build_arrivals({"kind": "nope"}, 5.0)
+    # spec-level overrides beat scenario defaults
+    short = traces.build_arrivals(
+        {"kind": "uniform", "rps": 10.0, "duration_s": 2.0}, 5.0)
+    assert short.size == 20

@@ -1,0 +1,69 @@
+"""Hypothesis property tests for the FDNInspector trace library.
+
+``hypothesis`` is an optional test extra (see pyproject.toml); without it
+this module degrades to a skip instead of a collection error — mirroring
+``tests/test_properties.py``."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.inspector import traces  # noqa: E402
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(1.0, 80.0),
+       st.floats(5.0, 120.0))
+@settings(**SETTINGS)
+def test_diurnal_deterministic_monotone_bounded(seed, rps, duration):
+    a = traces.diurnal_arrivals(rps, duration, seed=seed,
+                                period_s=duration)
+    b = traces.diurnal_arrivals(rps, duration, seed=seed,
+                                period_s=duration)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) >= 0.0)
+    assert a.size == 0 or (a[0] >= 0.0 and a[-1] < duration)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 30.0),
+       st.floats(0.0, 300.0), st.floats(2.0, 60.0))
+@settings(**SETTINGS)
+def test_mmpp_deterministic_monotone_bounded(seed, base, burst, duration):
+    a = traces.mmpp_arrivals(base, burst, duration, seed=seed)
+    b = traces.mmpp_arrivals(base, burst, duration, seed=seed)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(np.diff(a) >= 0.0)
+    assert a.size == 0 or (a[0] >= 0.0 and a[-1] <= duration)
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=60),
+       st.integers(0, 2**31 - 1), st.floats(0.05, 4.0))
+@settings(**SETTINGS)
+def test_azure_counts_expand_exactly(counts, seed, scale):
+    t = traces.counts_to_arrivals(counts, seed=seed, time_scale=scale)
+    assert t.size == sum(counts)
+    assert np.all(np.diff(t) >= 0.0)
+    assert t.size == 0 or t[0] >= 0.0
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.lists(st.tuples(st.sampled_from(["f1", "f2", "f3"]),
+                          st.floats(0.5, 40.0)),
+                min_size=1, max_size=4))
+@settings(**SETTINGS)
+def test_workload_mix_invariants(seed, streams):
+    mix = traces.WorkloadMix()
+    want = {}
+    for i, (name, rps) in enumerate(streams):
+        arr = traces.build_arrivals({"kind": "poisson", "rps": rps}, 10.0,
+                                    seed=seed + i)
+        mix.add(name, arr)
+        want[name] = want.get(name, 0) + arr.size
+    times, idx, names = mix.merge()
+    assert np.all(np.diff(times) >= 0.0)
+    assert times.size == sum(want.values())
+    got = {names[f]: int((idx == f).sum()) for f in set(idx.tolist())}
+    for name, n in want.items():
+        assert got.get(name, 0) == n
