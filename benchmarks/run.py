@@ -27,6 +27,7 @@ BENCHES = [
     "policy_sweep",
     "bench_sched_throughput",
     "bench_metrics_ingest",
+    "bench_chain_throughput",
 ]
 
 
@@ -45,6 +46,14 @@ def scenario_main(args) -> int:
     ScenarioReport.validate(json.loads(payload))
     print(payload)
     return 0
+
+
+def scenario_diff_main(args) -> int:
+    """``python benchmarks/run.py scenario-diff a.json b.json``: compare
+    two canonical ScenarioReport JSONs with per-metric relative
+    tolerances; exit 1 on drift (see benchmarks/scenario_diff.py)."""
+    from benchmarks.scenario_diff import main as diff_main
+    return diff_main(args)
 
 
 def _summarize_json(path: str, kind: str):
@@ -74,6 +83,8 @@ def _summarize_json(path: str, kind: str):
 def main() -> int:
     if len(sys.argv) > 1 and sys.argv[1] == "scenario":
         return scenario_main(sys.argv[2:])
+    if len(sys.argv) > 1 and sys.argv[1] == "scenario-diff":
+        return scenario_diff_main(sys.argv[2:])
     t0 = time.time()
     all_failures = []
     print("name,us_per_call,derived")

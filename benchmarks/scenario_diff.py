@@ -1,0 +1,187 @@
+"""Scenario-diff: compare two canonical ScenarioReport JSONs.
+
+Reports are byte-identical for identical code (the runner is seed-
+deterministic), so cross-PR regression tracking reduces to: run the same
+scenario on both sides, diff the reports with per-metric relative
+tolerances, fail loudly on drift.
+
+    python benchmarks/run.py scenario-diff a.json b.json
+    python benchmarks/run.py scenario-diff a.json b.json \
+        --tol 0.05 --tol p90_s=0.15
+
+Exit status: 0 when every compared metric is within tolerance, 1 on any
+drift (missing metrics count as drift).  NaN-vs-NaN compares equal (empty
+percentile slots).  Non-numeric leaves (placement maps, modes, names)
+must match exactly.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Any, Dict, List, Tuple
+
+# Per-metric relative tolerances; ``*`` is the fallback.  Percentile tails
+# get head-room (a handful of samples move them), counters are tight.
+DEFAULT_TOL = 0.05
+DEFAULT_TOLERANCES: Dict[str, float] = {
+    "*": DEFAULT_TOL,
+    "p99_s": 0.15,
+    "p90_s": 0.10,
+    "rps": 0.05,
+    "slo_violation_rate": 0.10,
+    "slo_violations": 0.10,
+    "cold_starts": 0.10,
+    "energy_wh": 0.05,
+    "energy_j": 0.05,
+    "decisions_per_sim_s": 0.05,
+    "transfer_s": 0.10,
+    "bytes_moved": 0.05,
+    "est_makespan_s": 0.10,
+    # exact-match metadata
+    "schema_version": 0.0,
+    "sim_duration_s": 0.0,
+    "slo_s": 0.0,
+}
+
+# the scenario spec echo is configuration, not measurement: only the name
+# participates in the diff (comparing reports of two different scenarios
+# is almost certainly an operator error)
+SECTIONS = ("totals", "per_platform", "per_function", "per_chain")
+
+
+class Drift:
+    def __init__(self, path: str, a: Any, b: Any, rel: float, tol: float):
+        self.path, self.a, self.b, self.rel, self.tol = path, a, b, rel, tol
+
+    def __str__(self):
+        rel = "n/a" if math.isnan(self.rel) else f"{self.rel:.4f}"
+        return (f"DRIFT {self.path}: a={self.a!r} b={self.b!r} "
+                f"rel={rel} tol={self.tol:g}")
+
+
+def _tol_for(key: str, tolerances: Dict[str, float]) -> float:
+    return tolerances.get(key, tolerances.get("*", DEFAULT_TOL))
+
+
+def _rel_diff(a: float, b: float) -> float:
+    if a == b:
+        return 0.0
+    denom = max(abs(a), abs(b))
+    return abs(a - b) / denom if denom else 0.0
+
+
+def _compare_leaf(path: str, key: str, a: Any, b: Any,
+                  tolerances: Dict[str, float], out: List[Drift]):
+    if isinstance(a, bool) or isinstance(b, bool) or \
+            not isinstance(a, (int, float)) or \
+            not isinstance(b, (int, float)):
+        if a != b:
+            out.append(Drift(path, a, b, float("nan"), 0.0))
+        return
+    fa, fb = float(a), float(b)
+    if math.isnan(fa) and math.isnan(fb):
+        return
+    if math.isnan(fa) != math.isnan(fb):
+        out.append(Drift(path, a, b, float("nan"),
+                         _tol_for(key, tolerances)))
+        return
+    tol = _tol_for(key, tolerances)
+    rel = _rel_diff(fa, fb)
+    if rel > tol:
+        out.append(Drift(path, a, b, rel, tol))
+
+
+def _compare_tree(path: str, key: str, a: Any, b: Any,
+                  tolerances: Dict[str, float], out: List[Drift]):
+    if isinstance(a, dict) and isinstance(b, dict):
+        for k in sorted(set(a) | set(b)):
+            sub = f"{path}.{k}"
+            if k not in a or k not in b:
+                missing = "a" if k not in a else "b"
+                out.append(Drift(sub, a.get(k, "<missing>"),
+                                 b.get(k, "<missing>"), float("nan"), 0.0))
+                continue
+            _compare_tree(sub, k, a[k], b[k], tolerances, out)
+        return
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        if len(a) != len(b):
+            out.append(Drift(path, f"len={len(a)}", f"len={len(b)}",
+                             float("nan"), 0.0))
+            return
+        for i, (xa, xb) in enumerate(zip(a, b)):
+            _compare_tree(f"{path}[{i}]", key, xa, xb, tolerances, out)
+        return
+    _compare_leaf(path, key, a, b, tolerances, out)
+
+
+def diff_reports(a: Dict[str, Any], b: Dict[str, Any],
+                 tolerances: Dict[str, float] = None) -> List[Drift]:
+    """All out-of-tolerance metrics between two report dicts."""
+    tolerances = {**DEFAULT_TOLERANCES, **(tolerances or {})}
+    out: List[Drift] = []
+    _compare_leaf("schema_version", "schema_version",
+                  a.get("schema_version"), b.get("schema_version"),
+                  tolerances, out)
+    name_a = (a.get("scenario") or {}).get("name")
+    name_b = (b.get("scenario") or {}).get("name")
+    if name_a != name_b:
+        out.append(Drift("scenario.name", name_a, name_b,
+                         float("nan"), 0.0))
+    for section in SECTIONS:
+        sa, sb = a.get(section), b.get(section)
+        if sa is None and sb is None:
+            continue
+        _compare_tree(section, section, sa or {}, sb or {},
+                      tolerances, out)
+    return out
+
+
+USAGE = ("usage: scenario-diff a.json b.json [--tol X] [--tol metric=X]")
+
+
+def _parse_args(argv: List[str]) -> Tuple[str, str, Dict[str, float]]:
+    paths: List[str] = []
+    tolerances: Dict[str, float] = {}
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg == "--tol":
+            i += 1
+            if i >= len(argv):
+                raise SystemExit(f"--tol needs a value\n{USAGE}")
+            spec = argv[i]
+            key, _, val = spec.rpartition("=")
+            try:
+                tolerances[key or "*"] = float(val)
+            except ValueError:
+                raise SystemExit(
+                    f"--tol expects a number, got {spec!r}\n{USAGE}")
+        else:
+            paths.append(arg)
+        i += 1
+    if len(paths) != 2:
+        raise SystemExit(USAGE)
+    return paths[0], paths[1], tolerances
+
+
+def main(argv: List[str]) -> int:
+    path_a, path_b, tolerances = _parse_args(argv)
+    with open(path_a) as f:
+        a = json.load(f)
+    with open(path_b) as f:
+        b = json.load(f)
+    drifts = diff_reports(a, b, tolerances)
+    for d in drifts:
+        print(d)
+    n = sum(1 for sec in SECTIONS for _ in (a.get(sec) or {}))
+    if drifts:
+        print(f"# scenario-diff: {len(drifts)} metric(s) out of tolerance")
+        return 1
+    print(f"# scenario-diff: OK ({path_a} vs {path_b}, "
+          f"{n} section groups compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

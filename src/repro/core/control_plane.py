@@ -280,6 +280,15 @@ class FDNControlPlane:
         if want > have:
             target.prewarm(fn.name, min(want - have, 8))
 
+    # ----------------------------------------------------------- chains ---
+    def chain_executor(self, fns: Dict[str, FunctionSpec], **kw):
+        """Factory for a chain executor bound to this control plane (the
+        collaborative-execution layer, repro.chains): stage batches flow
+        through ``submit_batch``, intermediates land in this plane's
+        object stores, transfer accounting in this plane's metrics."""
+        from repro.chains.executor import ChainExecutor
+        return ChainExecutor(self, fns, **kw)
+
     # --------------------------------------------------------------- run --
     def run_until(self, t: float):
         self.clock.run_until(t)

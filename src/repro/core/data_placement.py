@@ -8,8 +8,10 @@ cold-start cost on a platform.
 """
 from __future__ import annotations
 
-from collections import OrderedDict, defaultdict
-from typing import Dict, Optional, Set, Tuple
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from repro.core.behavioral import DataAccessModel
 
@@ -22,17 +24,28 @@ class ObjectStore:
         self.capacity = capacity_bytes
         self.objects: Dict[str, float] = {}      # key -> size bytes
         self.payloads: Dict[str, object] = {}    # optional real payloads
+        self._used = 0.0                         # running byte total
 
     def put(self, key: str, size: float, payload: object = None):
+        old = self.objects.get(key)
+        if old is not None:
+            self._used -= old
         self.objects[key] = size
+        self._used += size
         if payload is not None:
             self.payloads[key] = payload
+
+    def remove(self, key: str):
+        size = self.objects.pop(key, None)
+        if size is not None:
+            self._used -= size
+        self.payloads.pop(key, None)
 
     def has(self, key: str) -> bool:
         return key in self.objects
 
     def used(self) -> float:
-        return sum(self.objects.values())
+        return self._used
 
 
 class LRUCache:
@@ -41,6 +54,7 @@ class LRUCache:
     def __init__(self, capacity_bytes: float):
         self.capacity = capacity_bytes
         self._items: "OrderedDict[str, float]" = OrderedDict()
+        self._used = 0.0                         # running byte total
 
     def get(self, key: str) -> bool:
         if key in self._items:
@@ -51,13 +65,17 @@ class LRUCache:
     def put(self, key: str, size: float):
         if size > self.capacity:
             return
+        old = self._items.pop(key, None)
+        if old is not None:
+            self._used -= old
         self._items[key] = size
-        self._items.move_to_end(key)
-        while sum(self._items.values()) > self.capacity:
-            self._items.popitem(last=False)
+        self._used += size
+        while self._used > self.capacity:
+            _, evicted = self._items.popitem(last=False)
+            self._used -= evicted
 
     def used(self) -> float:
-        return sum(self._items.values())
+        return self._used
 
 
 class DataPlacementManager:
@@ -99,13 +117,36 @@ class DataPlacementManager:
             return self.local_bw
         return self.bw.get((a, b), self.wan_bw)
 
+    def bandwidth_matrix(self, locations: Sequence[str]) -> np.ndarray:
+        """(P, P) bytes/s between ``locations`` (diagonal: local bandwidth).
+        The chain planner inverts this into a seconds-per-byte transfer-cost
+        matrix, so inter-platform data gravity becomes one array op."""
+        names = list(locations)
+        n = len(names)
+        m = np.empty((n, n))
+        for i, a in enumerate(names):
+            for j, b in enumerate(names):
+                m[i, j] = self._bw(a, b)
+        return m
+
+    def transfer_seconds(self, size: float, src: str, dst: str) -> float:
+        """Seconds to move ``size`` bytes from ``src`` to ``dst``."""
+        return size / self._bw(src, dst)
+
     # ----------------------------------------------------------- access ---
-    def locate(self, key: str) -> Optional[str]:
-        best = None
-        for loc, st in self.stores.items():
-            if st.has(key):
-                best = loc if best is None else best
-        return best
+    def locate(self, key: str, origin: Optional[str] = None) -> \
+            Optional[str]:
+        """Location of a replica of ``key``; with ``origin`` given, the
+        *nearest* replica (highest bandwidth from ``origin``, the origin's
+        own store first).  Ties break on store-registration order."""
+        locs = [loc for loc, st in self.stores.items() if st.has(key)]
+        if not locs:
+            return None
+        if origin is None:
+            return locs[0]
+        if origin in locs:
+            return origin
+        return max(locs, key=lambda l: self._bw(origin, l))
 
     def locations(self, key: str) -> Set[str]:
         return {loc for loc, st in self.stores.items() if st.has(key)}
@@ -135,7 +176,9 @@ class DataPlacementManager:
 
     # -------------------------------------------------------- migration ---
     def migrate(self, key: str, to_loc: str):
-        src = self.locate(key)
+        """Replicate ``key`` into ``to_loc``'s store, copying from the
+        nearest existing replica (no-op if already local)."""
+        src = self.locate(key, origin=to_loc)
         if src is None or src == to_loc or to_loc not in self.stores:
             return
         size = self.stores[src].objects[key]

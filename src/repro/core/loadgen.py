@@ -394,11 +394,18 @@ def run_arrivals(clock: SimClock, submit_batch: Callable[[List[Invocation]],
 
 
 def attach_completion_hooks(control_plane) -> None:
-    """Wire Invocation._on_done callbacks through the control plane."""
-    def fire(inv):
-        cb = getattr(inv, "_on_done", None)
-        if cb is not None:
-            cb()
+    """Wire Invocation._on_done callbacks through the control plane.
+
+    Idempotent: the hook closure is cached on the control plane, so
+    repeated calls (the scenario runner and a ChainExecutor both want the
+    hooks) never double-fire a callback."""
+    fire = getattr(control_plane, "_completion_hook", None)
+    if fire is None:
+        def fire(inv):
+            cb = getattr(inv, "_on_done", None)
+            if cb is not None:
+                cb()
+        control_plane._completion_hook = fire
     for p in control_plane.platforms.values():
         if fire not in p.on_complete:
             p.on_complete.append(fire)

@@ -248,6 +248,10 @@ class MetricsRegistry:
     PLATFORM = ("invocations", "cold_starts", "exec_time",    # platform-
                 "replicas", "memory_mb")                      # centric
     INFRA = ("cpu_util", "mem_util", "disk_io")               # infra-centric
+    # chain-centric (recorded under the "_chain" pseudo-platform, keyed by
+    # chain label): end-to-end latency, bytes crossing platforms, seconds
+    # spent moving them (repro.chains.ChainExecutor)
+    CHAIN = ("chain_latency", "bytes_moved", "transfer_s")
 
     def __init__(self, window_s: float = 10.0, columnar: bool = True):
         self.window_s = window_s

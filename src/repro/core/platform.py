@@ -233,7 +233,10 @@ class TargetPlatform:
         while progressed and self.queue and not self.failed:
             progressed = False
             inv = self.queue[0]
-            fn = self.deployed[inv.fn.name]
+            # the invocation's own spec governs execution (chain stages
+            # carry per-instance data_objects); deployment was checked at
+            # enqueue, and for plain invocations both are the same object
+            fn = inv.fn
             rep = self._find_replica(fn.name)
             if rep is None and self.can_start_replica(fn):
                 rep = Replica(fn.name, COLD)

@@ -128,6 +128,17 @@ def as_snapshot(platforms: PlatformsLike) -> PlatformSnapshot:
     return PlatformSnapshot(platforms)
 
 
+class _SpecInv:
+    """Invocation-shaped wrapper: lets bare FunctionSpecs flow through
+    ``Policy.score`` (policies only read ``inv.fn``).  Chain planning
+    scores *stages* — functions that have no live invocation yet."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: FunctionSpec):
+        self.fn = fn
+
+
 class Policy:
     name = "base"
 
@@ -136,6 +147,13 @@ class Policy:
               snap: PlatformSnapshot) -> np.ndarray:
         """(N, P) cost matrix; np.inf marks an infeasible pairing."""
         raise NotImplementedError
+
+    def score_specs(self, specs: Sequence[FunctionSpec],
+                    platforms: PlatformsLike) -> np.ndarray:
+        """(N, P) cost matrix for bare FunctionSpecs (one row per spec) —
+        the whole-chain planner's entry point."""
+        return self.score([_SpecInv(f) for f in specs],
+                          as_snapshot(platforms))
 
     def choose_batch(self, invs: Sequence[Invocation],
                      platforms: PlatformsLike

@@ -269,6 +269,75 @@ def smoke_tiny() -> Scenario:
         duration_s=10.0, drain_s=30.0)
 
 
+# ---------------------------------------------------------------------------
+# Function chains (collaborative execution + data gravity, repro.chains)
+# ---------------------------------------------------------------------------
+
+def chain_etl(duration_s: float = 120.0) -> Scenario:
+    """ETL chain instances (extract -> 4x transform -> aggregate -> load)
+    planned by the data-gravity planner over the five platforms, riding
+    alongside plain nodeinfo traffic."""
+    return Scenario(
+        name="chains/etl-pipeline",
+        platforms=PAPER_FIVE,
+        workloads=(
+            Workload(mode="chain", chain="etl-pipeline",
+                     arrival={"kind": "poisson", "rps": 2.0}),
+            Workload("nodeinfo",
+                     arrival={"kind": "poisson", "rps": 20.0}),
+        ),
+        duration_s=duration_s)
+
+
+def chain_ml(duration_s: float = 120.0) -> Scenario:
+    """Preprocess -> serve -> respond over the Table-2 functions: the
+    paper's image/sentiment workloads composed into one application."""
+    return Scenario(
+        name="chains/ml-inference-preprocess-serve",
+        platforms=PAPER_FIVE,
+        workloads=(
+            Workload(mode="chain", chain="ml-preprocess-serve",
+                     arrival={"kind": "poisson", "rps": 3.0}),
+            Workload("JSON-loads",
+                     arrival={"kind": "poisson", "rps": 10.0}),
+        ),
+        duration_s=duration_s)
+
+
+AB_PAIR = ("cloud-cluster", "old-hpc-node-cluster")
+
+
+def split_vs_colocate(wan_bw: float = 2e9, duration_s: float = 120.0,
+                      rps: float = 3.0, suffix: str = "") -> Scenario:
+    """Collaborative split vs forced co-location A/B on the dual-source
+    chain: both arms share the platform pair, the inter-platform
+    bandwidth is the swept knob.  With a fast interconnect the split arm
+    wins end-to-end p90 (the co-located arm queues on one platform); with
+    a slow WAN the 16 MB of features crossing platforms flips the order.
+    """
+    return Scenario(
+        name=f"chains/split-vs-colocate-ab{suffix}",
+        platforms=AB_PAIR,
+        policy="perf_ranked",
+        bandwidths=((AB_PAIR[0], AB_PAIR[1], wan_bw),),
+        workloads=(
+            Workload(mode="chain", chain="ab-dual-source",
+                     plan_mode="colocate", label="ab@colocate",
+                     arrival={"kind": "poisson", "rps": rps}),
+            Workload(mode="chain", chain="ab-dual-source",
+                     plan_mode="split", label="ab@split",
+                     arrival={"kind": "poisson", "rps": rps}),
+        ),
+        duration_s=duration_s)
+
+
+register("chains/etl-pipeline", chain_etl)
+register("chains/ml-inference-preprocess-serve", chain_ml)
+register("chains/split-vs-colocate-ab", lambda: split_vs_colocate(2e9))
+# slow WAN: 1 rps keeps both arms stable, so the p90 flip measures the
+# transfer cost of gravity-blind splitting rather than queue collapse
+register("chains/split-vs-colocate-ab-slowwan",
+         lambda: split_vs_colocate(3e6, rps=1.0, suffix="-slowwan"))
 register("mix/five-platform", five_platform_mix)
 register("energy/edge-vs-cloud-diurnal", edge_vs_cloud_energy)
 register("burst/mmpp-storm", burst_storm)

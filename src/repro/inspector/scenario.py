@@ -38,6 +38,9 @@ from repro.core.scheduler import (DataLocalityPolicy, EnergyAwarePolicy,
                                   UtilizationAwarePolicy,
                                   WeightedCollaboration)
 from repro.core.types import SLO, DeploymentSpec, Invocation
+from repro.chains import catalog as chain_catalog
+from repro.chains.executor import ChainExecutor  # noqa: F401 (type hints)
+from repro.chains.planner import DataGravityPlanner
 from repro.inspector import traces
 
 SCHEMA_VERSION = 1
@@ -60,13 +63,29 @@ class Workload:
     ``mode="open"``: ``arrival`` is a ``traces.build_arrivals`` spec dict
     (seeded per workload: scenario seed + stream index).
     ``mode="closed"``: ``vus`` k6-style virtual users with ``sleep_s``
-    think time."""
-    function: str
-    mode: str = "open"                       # "open" | "closed"
+    think time.
+    ``mode="chain"``: ``chain`` names a ``repro.chains.catalog`` template;
+    each arrival launches one chain instance, planned once per workload by
+    the data-gravity planner in ``plan_mode`` and reported under
+    ``label`` (default ``"<chain>@<plan_mode>"``)."""
+    function: str = ""
+    mode: str = "open"                       # "open" | "closed" | "chain"
     arrival: Optional[Dict[str, Any]] = None
     vus: int = 0
     sleep_s: float = 0.0
     jitter: float = 0.05
+    chain: Optional[str] = None              # chains.catalog name
+    plan_mode: str = "auto"                  # chains.planner.PLAN_MODES
+    label: Optional[str] = None              # per_chain report key
+
+    def __post_init__(self):
+        if self.mode == "chain":
+            if not self.chain:
+                raise ValueError(
+                    "chain workload needs chain=<catalog name>")
+        elif not self.function:
+            raise ValueError(
+                f"{self.mode!r} workload needs a function name")
 
 
 @dataclass(frozen=True)
@@ -89,6 +108,9 @@ class Scenario:
     lb_kwargs: Dict[str, Any] = field(default_factory=dict)
     platform_override: Optional[str] = None  # exclusive per-platform runs
     data_location: str = "cloud-cluster"
+    # extra inter-location bandwidth pins, (loc_a, loc_b, bytes/s): the
+    # WAN-speed knob the chain split-vs-colocate A/Bs sweep
+    bandwidths: Tuple[Tuple[str, str, float], ...] = ()
     seed: int = 42
     analytic: bool = True                    # strip real JAX callables
     batch_window_s: float = 0.05
@@ -147,6 +169,20 @@ def assemble(sc: Scenario):
     fns = fn_mod.paper_functions(IMAGE_KEY, JSON_KEY)
     if sc.analytic:
         fns = {k: f.replace(real_fn=None) for k, f in fns.items()}
+    # chain workloads bring their own stage functions and data anchors
+    for w in sc.workloads:
+        if w.mode != "chain":
+            continue
+        tmpl = chain_catalog.get(w.chain)
+        for fname, spec in tmpl.functions.items():
+            if sc.analytic:
+                spec = spec.replace(real_fn=None)
+            fns.setdefault(fname, spec)
+        for inp in tmpl.inputs:
+            loc = inp.location or sc.data_location
+            if loc not in cp.placement.stores:
+                cp.placement.add_store(loc)
+            cp.placement.stores[loc].put(inp.key, inp.size_bytes)
     for fname, p90_s in sc.slo_overrides.items():
         fns[fname] = fns[fname].replace(slo=SLO(p90_response_s=p90_s))
     fn_mod.seed_object_stores(cp.placement, IMAGE_KEY, JSON_KEY,
@@ -156,6 +192,8 @@ def assemble(sc: Scenario):
                               location=REMOTE_STORE)
     for name in sc.platforms:
         cp.placement.set_bandwidth(name, REMOTE_STORE, REMOTE_BW)
+    for a, b, bw in sc.bandwidths:
+        cp.placement.set_bandwidth(a, b, float(bw))
     cp.deploy(DeploymentSpec(sc.name, list(fns.values()),
                              list(sc.platforms)))
     attach_completion_hooks(cp)
@@ -179,6 +217,9 @@ class ScenarioReport:
     totals: Dict[str, Any]
     per_platform: Dict[str, Dict[str, Any]]
     per_function: Dict[str, Dict[str, Any]]
+    # chain workloads only: per-label end-to-end latency percentiles,
+    # bytes moved between platforms, and the planner's placement decision
+    per_chain: Dict[str, Dict[str, Any]] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -194,6 +235,8 @@ class ScenarioReport:
                        "decisions_per_sim_s", "sim_duration_s",
                        "energy_wh")
     REQUIRED_STATS = ("completed", "mean_s", "p50_s", "p90_s", "p99_s")
+    REQUIRED_CHAIN = ("launched", "completed", "p50_s", "p90_s", "p99_s",
+                      "bytes_moved", "transfer_s", "placement", "mode")
 
     @classmethod
     def validate(cls, d: Dict[str, Any]) -> None:
@@ -214,6 +257,11 @@ class ScenarioReport:
                     if k not in stats:
                         raise ValueError(
                             f"{section}[{name!r}] missing {k!r}")
+        # per_chain is additive (pre-chain reports omit it entirely)
+        for name, stats in d.get("per_chain", {}).items():
+            for k in cls.REQUIRED_CHAIN:
+                if k not in stats:
+                    raise ValueError(f"per_chain[{name!r}] missing {k!r}")
 
 
 def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
@@ -253,6 +301,9 @@ def run_scenario(sc: Scenario) -> ScenarioReport:
     # one derived seed per load stream: deterministic, decorrelated
     closed_out: List[Invocation] = []
     mix = traces.WorkloadMix()
+    chain_exec: Optional[ChainExecutor] = None
+    planner: Optional[DataGravityPlanner] = None
+    last_chain_t = 0.0
     for i, w in enumerate(sc.workloads):
         stream_seed = sc.seed + 7919 * i
         if w.mode == "closed":
@@ -266,6 +317,27 @@ def run_scenario(sc: Scenario) -> ScenarioReport:
             mix.add(w.function,
                     traces.build_arrivals(w.arrival, sc.duration_s,
                                           seed=stream_seed))
+        elif w.mode == "chain":
+            if w.chain is None or w.arrival is None:
+                raise ValueError("chain workload needs a chain name and "
+                                 "an arrival spec")
+            if chain_exec is None:
+                chain_exec = cp.chain_executor(
+                    fns, sink=sink, batch_window_s=sc.batch_window_s)
+                planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+            chain = chain_catalog.get(w.chain).chain
+            plan = planner.plan(chain,
+                                [cp.platforms[n] for n in sc.platforms],
+                                mode=w.plan_mode)
+            label = w.label or f"{w.chain}@{w.plan_mode}"
+            arr = traces.build_arrivals(w.arrival, sc.duration_s,
+                                        seed=stream_seed)
+            if arr.size:
+                last_chain_t = max(last_chain_t, float(arr[-1]))
+                clock.schedule_many(
+                    arr.tolist(),
+                    [lambda c=chain, p=plan, l=label:
+                     chain_exec.launch(c, p, label=l)] * arr.size)
         else:
             raise ValueError(f"unknown workload mode {w.mode!r}")
 
@@ -275,7 +347,8 @@ def run_scenario(sc: Scenario) -> ScenarioReport:
                          sc.batch_window_s, sink)
 
     t_end = max(sc.duration_s,
-                float(times[-1]) if times.size else 0.0)
+                float(times[-1]) if times.size else 0.0,
+                last_chain_t)
     clock.run_until(t_end)
     clock.run_until(t_end + sc.drain_s)      # gracefulStop
     cp.run_until(clock.now())                # flush energy integrators
@@ -287,12 +360,15 @@ def run_scenario(sc: Scenario) -> ScenarioReport:
         cp.metrics.record_completions(sink, visible_infra=visible)
 
     return build_report(sc, cp, fns, sink,
-                        closed_submitted=len(closed_out))
+                        closed_submitted=len(closed_out),
+                        chain_exec=chain_exec)
 
 
 def build_report(sc: Scenario, cp: FDNControlPlane, fns,
                  sink: ColumnarResultSink,
-                 closed_submitted: int = 0) -> ScenarioReport:
+                 closed_submitted: int = 0,
+                 chain_exec: Optional[ChainExecutor] = None
+                 ) -> ScenarioReport:
     cols = sink.completion_columns()
     rt = cols["end"] - cols["arrival"]
     plat_col, fn_col, cold = cols["platform"], cols["fn"], cols["cold"]
@@ -350,7 +426,26 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
     }
     totals.update(_pct_stats(rt, sc.duration_s))
 
+    per_chain: Dict[str, Dict[str, Any]] = {}
+    if chain_exec is not None:
+        for label, recs in chain_exec.records.items():
+            lat = np.array([r[1] - r[0] for r in recs])
+            plan = chain_exec.plans[label]
+            stats = _pct_stats(lat, sc.duration_s)
+            stats["launched"] = chain_exec.launched_by_label.get(label, 0)
+            stats["bytes_moved"] = float(sum(r[2] for r in recs))
+            stats["transfer_s"] = float(sum(r[3] for r in recs))
+            stats["mode"] = plan.mode
+            stats["requested_mode"] = plan.requested_mode
+            stats["placement"] = dict(plan.assignment)
+            stats["est_makespan_s"] = plan.est_makespan_s
+            per_chain[label] = stats
+        totals["chains_launched"] = chain_exec.launched
+        totals["chains_completed"] = chain_exec.completed
+        totals["chains_failed"] = chain_exec.failed
+
     return ScenarioReport(schema_version=SCHEMA_VERSION,
                           scenario=sc.to_dict(), totals=totals,
                           per_platform=per_platform,
-                          per_function=per_function)
+                          per_function=per_function,
+                          per_chain=per_chain)

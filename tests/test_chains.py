@@ -1,0 +1,424 @@
+"""Function-chain subsystem: DAG spec validation, data-placement fixes
+(O(1) eviction / nearest-replica locate), data-gravity planner parity and
+WAN-flip decisions, chain execution through the control plane, scenario
+integration (per_chain reports, determinism, split-vs-colocate A/B), and
+the scenario-diff tool."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.chains import (EXTERNAL, Chain, ChainExecutor, DataEdge,
+                          DataGravityPlanner, Stage, catalog)
+from repro.core import profiles as prof_mod
+from repro.core import functions as fn_mod
+from repro.core.control_plane import FDNControlPlane
+from repro.core.data_placement import (DataPlacementManager, LRUCache,
+                                       ObjectStore)
+from repro.core.loadgen import attach_completion_hooks
+from repro.core.scheduler import PerformanceRankedPolicy
+from repro.core.types import DeploymentSpec, FunctionSpec, Invocation
+from repro.inspector import Scenario, ScenarioReport, Workload, run_scenario
+from repro.inspector.registry import chain_etl, split_vs_colocate
+
+AB_PAIR = ("cloud-cluster", "old-hpc-node-cluster")
+
+
+# ------------------------------------------------------------ chain spec --
+
+def test_chain_validation():
+    with pytest.raises(ValueError, match="duplicate"):
+        Chain("dup", (Stage("a", "f"), Stage("a", "f")))
+    with pytest.raises(ValueError, match="unknown stage"):
+        Chain("bad", (Stage("a", "f"),),
+              (DataEdge("a", "zzz", "k", 1.0),))
+    with pytest.raises(ValueError, match="cycle"):
+        Chain("loop", (Stage("a", "f"), Stage("b", "f")),
+              (DataEdge("a", "b", "x", 1.0),
+               DataEdge("b", "a", "y", 1.0)))
+
+
+def test_chain_structure():
+    ch = Chain("diamond",
+               (Stage("src", "f"), Stage("l", "f"), Stage("r", "f"),
+                Stage("sink", "f")),
+               (DataEdge(EXTERNAL, "src", "in", 5.0),
+                DataEdge("src", "l", "a", 1.0),
+                DataEdge("src", "r", "b", 2.0),
+                DataEdge("l", "sink", "c", 3.0),
+                DataEdge("r", "sink", "d", 4.0)))
+    assert ch.topo_order() == ("src", "l", "r", "sink")
+    assert ch.preds("sink") == ("l", "r")
+    assert ch.succs("src") == ("l", "r")
+    assert ch.sinks() == ("sink",)
+    assert [e.key for e in ch.external_inputs()] == ["in"]
+    assert not ch.in_edges("sink")[0].external
+
+
+# -------------------------------------------------- data placement fixes --
+
+def test_object_store_used_running_total():
+    st = ObjectStore("x")
+    st.put("a", 100.0)
+    st.put("b", 50.0)
+    assert st.used() == 150.0
+    st.put("a", 30.0)                       # overwrite adjusts the total
+    assert st.used() == 80.0
+    st.remove("b")
+    assert st.used() == 30.0
+    st.remove("nope")                       # no-op
+    assert st.used() == 30.0
+
+
+def test_lru_eviction_order_pinned():
+    c = LRUCache(100.0)
+    c.put("a", 40.0)
+    c.put("b", 40.0)
+    c.put("c", 15.0)
+    assert c.used() == 95.0
+    assert c.get("a")                        # refresh a -> b is now LRU
+    c.put("d", 40.0)                         # evicts b (front) and stops
+    assert not c.get("b")
+    assert c.get("c") and c.get("a") and c.get("d")
+    assert c.used() == 95.0
+    c.put("e", 20.0)                         # evicts c (the LRU after the
+    assert not c.get("c")                    # gets above refreshed c,a,d)
+    assert c.get("a") and c.get("d") and c.get("e")
+    assert c.used() == 100.0
+    c.put("d", 10.0)                         # re-put shrinks, no eviction
+    assert c.used() == 70.0
+    c.put("huge", 1000.0)                    # over capacity: ignored
+    assert c.used() == 70.0
+
+
+def test_locate_returns_nearest_replica():
+    pm = DataPlacementManager(wan_bw=1e6)
+    for loc in ("a", "b", "c"):
+        pm.add_store(loc)
+    pm.stores["a"].put("obj", 10.0)
+    pm.stores["c"].put("obj", 10.0)
+    pm.set_bandwidth("b", "c", 1e9)          # c is b's fast neighbour
+    # regression: the old locate ignored the origin and returned the
+    # first store in registration order ("a") regardless of bandwidth
+    assert pm.locate("obj", origin="b") == "c"
+    assert pm.locate("obj", origin="a") == "a"      # local replica wins
+    assert pm.locate("obj") == "a"                  # no origin: first
+    assert pm.locate("missing", origin="b") is None
+
+
+def test_migrate_copies_from_nearest():
+    pm = DataPlacementManager(wan_bw=1e6)
+    for loc in ("a", "b", "c"):
+        pm.add_store(loc)
+    pm.stores["a"].put("obj", 42.0, payload="payload")
+    pm.migrate("obj", "b")
+    assert pm.stores["b"].has("obj")
+    assert pm.bytes_migrated == 42.0
+    pm.migrate("obj", "b")                   # already local: no-op
+    assert pm.migrations == 1
+
+
+def test_bandwidth_matrix():
+    pm = DataPlacementManager(local_bw=10.0, wan_bw=1.0)
+    pm.add_store("a")
+    pm.add_store("b")
+    pm.set_bandwidth("a", "b", 5.0)
+    m = pm.bandwidth_matrix(["a", "b"])
+    assert m.shape == (2, 2)
+    assert m[0, 0] == m[1, 1] == 10.0
+    assert m[0, 1] == m[1, 0] == 5.0
+    assert pm.transfer_seconds(10.0, "a", "b") == 2.0
+
+
+# ---------------------------------------------------------- planner ------
+
+def _ab_harness(bw):
+    cp = FDNControlPlane()
+    for name in AB_PAIR:
+        cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
+    cp.policy = PerformanceRankedPolicy(cp.perf)
+    cp.placement.set_bandwidth(*AB_PAIR, bw)
+    tmpl = catalog.get("ab-dual-source")
+    fns = dict(tmpl.functions)
+    cp.deploy(DeploymentSpec("ab", list(fns.values()), list(AB_PAIR)))
+    for inp in tmpl.inputs:
+        cp.placement.stores[inp.location].put(inp.key, inp.size_bytes)
+    attach_completion_hooks(cp)
+    return cp, fns, tmpl
+
+
+def test_single_stage_chain_matches_scalar_choose():
+    """Parity: planning a one-stage chain equals the scalar per-invocation
+    decision when the chain's external edge mirrors the function's data
+    objects."""
+    cp = FDNControlPlane()
+    for name in prof_mod.PAPER_PLATFORMS:
+        cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
+    fns = {k: f.replace(real_fn=None)
+           for k, f in fn_mod.paper_functions().items()}
+    fn_mod.seed_object_stores(cp.placement, location="edge-cluster")
+    cp.deploy(DeploymentSpec("parity", list(fns.values()),
+                             list(cp.platforms)))
+    spec = fns["image-processing"]           # has data_objects=(IMAGE_KEY,)
+    chain = Chain("one", (Stage("only", "image-processing"),),
+                  (DataEdge(EXTERNAL, "only", spec.data_objects[0], 2e6),))
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = list(cp.platforms.values())
+    for mode in ("auto", "gravity", "colocate"):
+        plan = planner.plan(chain, plats, mode=mode)
+        expected = cp.policy.choose(Invocation(spec, 0.0), plats)
+        assert plan.assignment["only"] == expected.prof.name, mode
+
+
+def test_planner_wan_bandwidth_flips_decision():
+    """The data-gravity planner's auto mode splits across platforms on a
+    fast interconnect and collapses to co-location on a slow WAN."""
+    fast_cp, fast_fns, tmpl = _ab_harness(2e9)
+    planner = DataGravityPlanner(fast_cp.policy, fast_cp.placement,
+                                 fast_fns)
+    plats = [fast_cp.platforms[n] for n in AB_PAIR]
+    fast_plan = planner.plan(tmpl.chain, plats, mode="auto")
+    assert fast_plan.mode == "gravity"
+    assert len(set(fast_plan.assignment.values())) > 1    # genuine split
+
+    slow_cp, slow_fns, tmpl = _ab_harness(3e6)
+    planner = DataGravityPlanner(slow_cp.policy, slow_cp.placement,
+                                 slow_fns)
+    plats = [slow_cp.platforms[n] for n in AB_PAIR]
+    slow_plan = planner.plan(tmpl.chain, plats, mode="auto")
+    assert slow_plan.mode == "colocate"
+    assert len(set(slow_plan.assignment.values())) == 1
+    # the co-located home is the big source's platform (data gravity)
+    assert set(slow_plan.assignment.values()) == {"cloud-cluster"}
+
+
+def test_planner_rejects_unknown_mode_and_infeasible():
+    cp, fns, tmpl = _ab_harness(2e9)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    with pytest.raises(ValueError, match="unknown plan mode"):
+        planner.plan(tmpl.chain, plats, mode="nope")
+    undeployed = Chain("undeployed", (Stage("s", "never-deployed"),))
+    planner.fns["never-deployed"] = FunctionSpec(name="never-deployed")
+    with pytest.raises(ValueError, match="no feasible platform"):
+        planner.plan(undeployed, plats, mode="gravity")
+
+
+# ---------------------------------------------------------- executor -----
+
+def test_chain_executes_and_accounts_transfers():
+    cp, fns, tmpl = _ab_harness(2e9)
+    ex = ChainExecutor(cp, fns)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    plan = planner.plan(tmpl.chain, plats, mode="gravity")
+    inst = ex.launch(tmpl.chain, plan, label="t")
+    cp.clock.run_until(600.0)
+    assert inst.status == "done"
+    assert inst.latency is not None and inst.latency > 0
+    assert ex.completed == 1 and ex.failed == 0
+    # split plan crossed at least one edge -> bytes + seconds accounted
+    assert inst.bytes_moved > 0 and inst.transfer_s > 0
+    assert cp.metrics.total("_chain", "t", "bytes_moved") == \
+        inst.bytes_moved
+    # intermediates were recorded, then cleaned after completion
+    for e in tmpl.chain.edges:
+        if not e.external:
+            key = ex.instance_key(inst, e)
+            assert all(not st.has(key)
+                       for st in cp.placement.stores.values())
+
+
+def test_chain_fan_out_runs_all_invocations():
+    cp, fns, tmpl = _ab_harness(2e9)
+    ex = ChainExecutor(cp, fns)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    plan = planner.plan(tmpl.chain, plats, mode="colocate")
+    ex.launch(tmpl.chain, plan)
+    cp.clock.run_until(600.0)
+    # 1 extract + 4 shards + 1 join + 1 report
+    assert cp.completed_count == 7
+    assert ex.completed == 1
+
+
+def test_colocated_chain_moves_fewer_bytes():
+    cp, fns, tmpl = _ab_harness(2e9)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    ex = ChainExecutor(cp, fns)
+    a = ex.launch(tmpl.chain,
+                  planner.plan(tmpl.chain, plats, mode="colocate"),
+                  label="coloc")
+    b = ex.launch(tmpl.chain,
+                  planner.plan(tmpl.chain, plats, mode="split"),
+                  label="split")
+    cp.clock.run_until(600.0)
+    assert a.status == b.status == "done"
+    assert a.bytes_moved < b.bytes_moved
+
+
+def test_platform_failure_redelivers_or_fails_instances():
+    """A failed planned platform must not leave instances stuck in
+    'running': with an alternative alive the stages are redelivered and
+    the chain completes; with every platform down the instance is
+    marked failed."""
+    cp, fns, tmpl = _ab_harness(2e9)
+    ex = ChainExecutor(cp, fns)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    plan = planner.plan(tmpl.chain, plats, mode="colocate")
+    inst = ex.launch(tmpl.chain, plan)
+    cp.platforms[plan.assignment["join"]].fail()     # colocation home down
+    cp.clock.run_until(600.0)
+    assert inst.status == "done"                     # redelivered
+    assert cp.redeliverer.redelivered > 0
+
+    cp, fns, tmpl = _ab_harness(2e9)
+    ex = ChainExecutor(cp, fns)
+    planner = DataGravityPlanner(cp.policy, cp.placement, fns)
+    plats = [cp.platforms[n] for n in AB_PAIR]
+    plan = planner.plan(tmpl.chain, plats, mode="colocate")
+    inst = ex.launch(tmpl.chain, plan)
+    for p in cp.platforms.values():                  # everything down
+        p.fail()
+    cp.clock.run_until(600.0)
+    assert inst.status == "failed"
+    assert ex.failed == 1 and ex.completed == 0
+
+
+def test_proactive_staging_accounts_bytes():
+    """Staged external inputs are still real transfers: the triggering
+    instance is charged their bytes/seconds even though the consumer
+    later reads a local replica."""
+    cp, fns, _tmpl = _ab_harness(2e9)
+    chain = Chain(
+        "staged",
+        (Stage("a", "chain-report"), Stage("b", "chain-join")),
+        (DataEdge("a", "b", "mid", 1e6),
+         DataEdge(EXTERNAL, "b", "chains/ab/big-source", 48e6)))
+    from repro.chains import ChainPlan
+    home = "old-hpc-node-cluster"                    # big-source is remote
+    plan = ChainPlan(chain="staged", mode="colocate",
+                     requested_mode="colocate",
+                     assignment={"a": home, "b": home},
+                     est_makespan_s=0.0, est_compute_s=0.0,
+                     est_transfer_s=0.0, est_bytes_moved=0.0)
+    ex = ChainExecutor(cp, fns)
+    inst = ex.launch(chain, plan)
+    cp.clock.run_until(600.0)
+    assert inst.status == "done"
+    # staging replicated the 48 MB source to the home platform and the
+    # instance was charged for it exactly once
+    assert cp.placement.stores[home].has("chains/ab/big-source")
+    assert inst.bytes_moved == pytest.approx(48e6)
+    assert inst.transfer_s > 0
+
+
+# ------------------------------------------------- scenario integration --
+
+def test_chain_scenario_report_deterministic():
+    sc = chain_etl(duration_s=20.0)
+    a = run_scenario(sc)
+    b = run_scenario(sc)
+    ja, jb = a.to_json(), b.to_json()
+    assert ja == jb
+    ScenarioReport.validate(json.loads(ja))
+    pc = a.per_chain["etl-pipeline@auto"]
+    assert pc["completed"] > 0
+    assert pc["launched"] >= pc["completed"]
+    assert set(pc["placement"]) == {"extract", "transform", "aggregate",
+                                    "load"}
+    assert a.totals["chains_completed"] == pc["completed"]
+    assert np.isfinite(pc["p90_s"])
+
+
+def test_chain_scenario_seed_changes_report():
+    a = run_scenario(chain_etl(duration_s=20.0))
+    b = run_scenario(chain_etl(duration_s=20.0).replace(seed=7))
+    assert a.to_json() != b.to_json()
+
+
+def test_chain_workload_validation():
+    sc = Scenario(name="x", platforms=AB_PAIR,
+                  workloads=(Workload(mode="chain",
+                                      chain="ab-dual-source"),),
+                  duration_s=1.0)
+    with pytest.raises(ValueError, match="chain workload"):
+        run_scenario(sc)
+
+
+def test_split_vs_colocate_ab_flips_with_wan_bandwidth():
+    """Acceptance: collaborative execution beats forced co-location on
+    end-to-end chain p90 when the interconnect is fast; a slow WAN
+    reverses the order."""
+    fast = run_scenario(split_vs_colocate(2e9, duration_s=40.0))
+    assert fast.per_chain["ab@split"]["p90_s"] < \
+        fast.per_chain["ab@colocate"]["p90_s"]
+    slow = run_scenario(split_vs_colocate(3e6, rps=1.0, duration_s=40.0,
+                                          suffix="-slowwan"))
+    assert slow.per_chain["ab@split"]["p90_s"] > \
+        slow.per_chain["ab@colocate"]["p90_s"]
+    # both arms completed everything they launched (stable regimes)
+    for rep in (fast, slow):
+        for arm in rep.per_chain.values():
+            assert arm["completed"] == arm["launched"] > 0
+
+
+# ------------------------------------------------------- scenario-diff ---
+
+def _mini_report():
+    rep = run_scenario(chain_etl(duration_s=10.0))
+    return json.loads(rep.to_json())
+
+
+def test_scenario_diff_self_compare_clean():
+    from benchmarks.scenario_diff import diff_reports
+    a = _mini_report()
+    assert diff_reports(a, json.loads(json.dumps(a))) == []
+
+
+def test_scenario_diff_flags_drift_and_missing():
+    from benchmarks.scenario_diff import diff_reports
+    a = _mini_report()
+    b = json.loads(json.dumps(a))
+    b["totals"]["completed"] = int(a["totals"]["completed"] * 1.5)
+    drifts = diff_reports(a, b)
+    assert any(d.path == "totals.completed" for d in drifts)
+    c = json.loads(json.dumps(a))
+    del c["totals"]["energy_wh"]
+    drifts = diff_reports(a, c)
+    assert any("energy_wh" in d.path for d in drifts)
+
+
+def test_scenario_diff_respects_tolerances():
+    from benchmarks.scenario_diff import diff_reports
+    a = _mini_report()
+    b = json.loads(json.dumps(a))
+    b["totals"]["p90_s"] = a["totals"]["p90_s"] * 1.05   # inside 10%
+    assert not [d for d in diff_reports(a, b)
+                if d.path == "totals.p90_s"]
+    b["totals"]["p90_s"] = a["totals"]["p90_s"] * 1.25   # outside
+    assert [d for d in diff_reports(a, b) if d.path == "totals.p90_s"]
+
+
+def test_scenario_diff_cli_bad_args():
+    from benchmarks.scenario_diff import _parse_args
+    assert _parse_args(["a", "b", "--tol", "p90_s=0.2", "--tol", "0.1"]) \
+        == ("a", "b", {"p90_s": 0.2, "*": 0.1})
+    for bad in (["a"], ["a", "b", "--tol"], ["a", "b", "--tol", "abc"]):
+        with pytest.raises(SystemExit):
+            _parse_args(bad)
+
+
+def test_scenario_diff_cli_exit_codes(tmp_path):
+    from benchmarks.scenario_diff import main
+    a = _mini_report()
+    pa = tmp_path / "a.json"
+    pb = tmp_path / "b.json"
+    pa.write_text(json.dumps(a))
+    pb.write_text(json.dumps(a))
+    assert main([str(pa), str(pb)]) == 0
+    a["totals"]["p90_s"] *= 3.0
+    pb.write_text(json.dumps(a))
+    assert main([str(pa), str(pb)]) == 1
