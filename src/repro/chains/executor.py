@@ -54,6 +54,24 @@ class ChainInstance:
         return None if self.end_t is None else self.end_t - self.t0
 
 
+class _StageSlot:
+    """One stage-invocation completion slot.  The original invocation and
+    any hedged duplicates the control plane spawns for it (batch-aware
+    hedging arms one timer per released stage batch) all point at the
+    same slot: the FIRST completion consumes it and advances the chain —
+    so a winning speculative duplicate finishes the stage, at the
+    platform it actually ran on.  ``carriers`` counts in-flight copies;
+    the instance only fails when every carrier is exhausted."""
+
+    __slots__ = ("inst", "stage", "consumed", "carriers")
+
+    def __init__(self, inst: ChainInstance, stage: Stage):
+        self.inst = inst
+        self.stage = stage
+        self.consumed = False
+        self.carriers = 1
+
+
 class ChainExecutor:
     """Drives chain instances over one control plane.
 
@@ -61,6 +79,11 @@ class ChainExecutor:
     ``submitted``/``rejected`` counters bumped for every stage invocation,
     keeping ScenarioReport totals consistent with the per-stage completion
     columns the sink already collects from the platforms.
+
+    Stage releases ride ``FDNControlPlane.submit_batch``, so with hedging
+    enabled each released stage batch arms one vectorized hedge timer per
+    (fn, platform) group; ``HedgePolicy.on_duplicate`` wires the
+    duplicates back into the originals' stage slots.
     """
 
     METRIC_SCOPE = "_chain"
@@ -81,10 +104,12 @@ class ChainExecutor:
         # (instance, stage, platform) triples awaiting one batched release
         self._pending: List[Tuple[ChainInstance, Stage, str]] = []
         self._flush_scheduled = False
-        # in-flight stage invocations -> their instance (failure tracking)
-        self._owner: Dict[int, ChainInstance] = {}
+        # in-flight stage invocations (originals AND hedged duplicates)
+        # -> their completion slot (failure tracking + first-wins)
+        self._owner: Dict[int, _StageSlot] = {}
         for p in cp.platforms.values():
             p.on_fail.append(self._on_platform_fail)
+        cp.hedge.on_duplicate.append(self._on_hedge_dup)
         self._spec_cache: Dict[Tuple[str, Tuple[str, ...],
                                      Optional[float]], FunctionSpec] = {}
         self.launched = 0
@@ -195,16 +220,15 @@ class ChainExecutor:
             self._account_transfers(inst, stage, pname)
             for _ in range(stage.fan_out):
                 inv = Invocation(spec, now)
-                self._make_done(inst, stage, inv)
-                self._owner[inv.id] = inst
+                self._attach_slot(_StageSlot(inst, stage), inv)
                 groups.setdefault(pname, []).append(inv)
         for pname, invs in groups.items():
             # an earlier group's rejection may have failed an instance
             # this group also carries work for — drop those invocations
             live = []
             for inv in invs:
-                inst = self._owner.get(inv.id)
-                if inst is None or inst.status != "running":
+                slot = self._owner.get(inv.id)
+                if slot is None or slot.inst.status != "running":
                     inv._on_done = None
                     self._owner.pop(inv.id, None)
                 else:
@@ -223,7 +247,8 @@ class ChainExecutor:
             for inv in live:
                 if inv.status == "failed":
                     inv._on_done = None
-                    self._fail_instance(self._owner.pop(inv.id, None))
+                    slot = self._owner.pop(inv.id, None)
+                    self._fail_instance(slot.inst if slot else None)
 
     def _fail_instance(self, inst: Optional[ChainInstance]):
         if inst is not None and inst.status == "running":
@@ -235,12 +260,28 @@ class ChainExecutor:
         """Platform-level failure of a stage invocation.  Runs after the
         control plane's redelivery hook (callback registration order): a
         resubmitted invocation is back to 'pending' and may still
-        complete, but one the Redeliverer exhausted stays 'failed' and
-        would otherwise leave its instance stuck in 'running' forever."""
-        if inv.id not in self._owner:
+        complete, but one the Redeliverer exhausted stays 'failed'.  The
+        instance only fails once the slot's LAST carrier (original or
+        hedged duplicate) is exhausted and nothing completed it."""
+        slot = self._owner.get(inv.id)
+        if slot is None:
             return
         if inv.status == "failed":
-            self._fail_instance(self._owner.pop(inv.id))
+            self._owner.pop(inv.id, None)
+            if slot.consumed:
+                return
+            slot.carriers -= 1
+            if slot.carriers <= 0:
+                self._fail_instance(slot.inst)
+
+    def _on_hedge_dup(self, orig: Invocation, dup: Invocation):
+        """A speculative duplicate was spawned for one of our stage
+        invocations: point it at the same completion slot, first-wins."""
+        slot = self._owner.get(orig.id)
+        if slot is None or slot.consumed:
+            return
+        slot.carriers += 1
+        self._attach_slot(slot, dup)
 
     def _account_transfers(self, inst: ChainInstance, stage: Stage,
                            pname: str):
@@ -259,19 +300,22 @@ class ChainExecutor:
             inst.transfer_s += secs
 
     # ------------------------------------------------------ completion ---
-    def _make_done(self, inst: ChainInstance, stage: Stage,
-                   inv: Invocation):
-        def done():
-            if inv._on_done is not done:       # already consumed
-                return
-            inv._on_done = None
-            self._stage_inv_done(inst, stage, inv)
-        inv._on_done = done
-        return done
+    def _attach_slot(self, slot: _StageSlot, inv: Invocation):
+        self._owner[inv.id] = slot
+        inv._on_done = lambda: self._slot_done(slot, inv)
+
+    def _slot_done(self, slot: _StageSlot, completing: Invocation):
+        """First completion (original or hedged duplicate) consumes the
+        slot and advances the chain; later ones are no-ops."""
+        completing._on_done = None
+        self._owner.pop(completing.id, None)
+        if slot.consumed:
+            return
+        slot.consumed = True
+        self._stage_inv_done(slot.inst, slot.stage, completing)
 
     def _stage_inv_done(self, inst: ChainInstance, stage: Stage,
                         inv: Invocation):
-        self._owner.pop(inv.id, None)
         inst.outstanding[stage.name] -= 1
         if inst.outstanding[stage.name] > 0 or inst.status != "running":
             return

@@ -206,11 +206,11 @@ class DataAccessModel:
         self.reads: Dict[Tuple[str, str], int] = defaultdict(int)
         self.writes: Dict[Tuple[str, str], int] = defaultdict(int)
 
-    def record_read(self, fn: str, obj: str):
-        self.reads[(fn, obj)] += 1
+    def record_read(self, fn: str, obj: str, count: int = 1):
+        self.reads[(fn, obj)] += count
 
-    def record_write(self, fn: str, obj: str):
-        self.writes[(fn, obj)] += 1
+    def record_write(self, fn: str, obj: str, count: int = 1):
+        self.writes[(fn, obj)] += count
 
     def hot_objects(self, fn: str, k: int = 5) -> List[str]:
         items = [(o, c) for (f, o), c in self.reads.items() if f == fn]
@@ -232,6 +232,23 @@ class InteractionModel:
             if t - lt <= self.window_s and lf != fn:
                 self.edges[(lf, fn)] += 1
         self._last = (fn, t)
+
+    def record_batch(self, fns: List[str], t: float):
+        """Fold a simultaneous arrival burst (one batch admission) into
+        the co-invocation graph — equivalent to ``record(fn, t)`` per
+        invocation in stream order, but one pass: every adjacent pair of
+        *distinct* functions inside the burst (dt = 0 <= window) adds one
+        edge, plus the boundary pair against the previous arrival."""
+        if not fns:
+            return
+        if self._last is not None:
+            lf, lt = self._last
+            if t - lt <= self.window_s and lf != fns[0]:
+                self.edges[(lf, fns[0])] += 1
+        for prev, cur in zip(fns, fns[1:]):
+            if prev != cur:
+                self.edges[(prev, cur)] += 1
+        self._last = (fns[-1], t)
 
     def compose_candidates(self, min_count: int = 10) -> List[Tuple[str,
                                                                     str]]:

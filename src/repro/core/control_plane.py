@@ -18,7 +18,7 @@ from repro.core.faults import FailureDetector, HedgePolicy, Redeliverer
 from repro.core.knowledge_base import KnowledgeBase
 from repro.core.monitoring import MetricsRegistry
 from repro.core.platform import TargetPlatform
-from repro.core.scheduler import Policy, SLOCompositePolicy
+from repro.core.scheduler import Policy, SLOCompositePolicy, as_snapshot
 from repro.core.sidecar import SidecarController
 from repro.core.simulator import SimClock
 from repro.core.types import DeploymentSpec, FunctionSpec, Invocation
@@ -170,83 +170,186 @@ class FDNControlPlane:
 
     def submit_batch(self, invs: Sequence[Invocation],
                      platform_override: Optional[str] = None) -> int:
-        """Admit a whole arrival batch in ONE policy evaluation.
+        """Admit a whole arrival batch in ONE fused policy evaluation.
 
-        The policy scores the batch against a single columnar platform
-        snapshot (scheduler.PlatformSnapshot), decisions are logged to the
-        knowledge base in bulk, and each target platform drains its queue
-        once per batch instead of once per invocation.  Returns the number
-        of accepted invocations; rejected ones land in ``self.rejected``.
+        One pass groups the batch by distinct function and folds the
+        arrival bookkeeping (rate model counts, co-invocation edges) into
+        bulk updates; the policy then makes one fused decision per
+        (function, platform-set) — the jitted cascade + argmin of
+        ``scheduler.fn_decisions`` — instead of scoring an (N, P) matrix
+        row per invocation (stateful rotation policies keep the full-
+        matrix path).  Decisions are logged to the knowledge base in bulk,
+        each target platform drains its queue once per batch, and with
+        hedging enabled ONE vectorized hedge timer is armed per
+        (fn, platform) admission group rather than per invocation.
+
+        Platform choices are identical to per-invocation ``submit`` calls
+        (tests pin this).  Queue order inside ONE batch: arrivals in a
+        batch share a timestamp, so with knowledge-base row logging off
+        (the production config) admission is grouped per distinct
+        function — a deterministic tie-break between simultaneous
+        arrivals; with logging on, strict arrival order is kept and the
+        logged rows match sequential submits row for row.  Returns the
+        number of accepted invocations; rejected ones land in
+        ``self.rejected``.
         """
         if not invs:
             return 0
         now = self.clock.now()
-        # arrival bookkeeping (exactly once per invocation, rate-model
-        # counts folded per function)
+        # one pass: distinct-function grouping (mirror of
+        # scheduler.group_by_fn — identity-keyed, first-appearance order;
+        # keep the two in sync) fused with arrival bookkeeping (exactly
+        # once per invocation, rate-model counts folded per fn)
+        groups: List[Tuple[FunctionSpec, List[int]]] = []
+        gmap: Dict[int, Tuple[FunctionSpec, List[int]]] = {}
         fn_counts: Dict[str, int] = {}
-        seen_fns: Dict[str, FunctionSpec] = {}
-        for inv in invs:
-            name = inv.fn.name
-            seen_fns.setdefault(name, inv.fn)
+        new_names: List[str] = []
+        for i, inv in enumerate(invs):
+            fn = inv.fn
+            g = gmap.get(id(fn))
+            if g is None:
+                g = (fn, [i])
+                gmap[id(fn)] = g
+                groups.append(g)
+            else:
+                g[1].append(i)
             if not inv.arrival_recorded:
                 inv.arrival_recorded = True
+                name = fn.name
                 fn_counts[name] = fn_counts.get(name, 0) + 1
-                self.interactions.record(name, now)
+                new_names.append(name)
         for name, c in fn_counts.items():
             self.events.record_many(name, now, c)
+        self.interactions.record_batch(new_names, now)
         if self.predictive_prewarm:
-            for fn in seen_fns.values():
+            seen: Dict[str, FunctionSpec] = {}
+            for fn, _idxs in groups:
+                seen.setdefault(fn.name, fn)
+            for fn in seen.values():
                 self._maybe_prewarm(fn)
 
         alive = self.alive_platforms()
+        n = len(invs)
+        # per-GROUP routing: (fn, idxs, target) — valid whenever every
+        # invocation of a function shares one decision (fused decisions
+        # and overrides); None for stateful per-row policies
+        fast: Optional[List[Tuple[FunctionSpec, List[int],
+                                  Optional[TargetPlatform]]]] = None
+        targets: Optional[List[Optional[TargetPlatform]]] = None
         if platform_override is not None:
-            override = self.platforms.get(platform_override)
-            targets: List[Optional[TargetPlatform]] = [override] * len(invs)
+            ov = self.platforms.get(platform_override)
+            fast = [(fn, idxs, ov) for fn, idxs in groups]
         else:
-            targets = self.policy.choose_batch(invs, alive)
+            snap = as_snapshot(alive)
+            res = self.policy.fn_decisions([g[0] for g in groups], snap,
+                                           n=n)
+            if res is None:                 # stateful policy: full matrix
+                targets = self.policy.choose_batch(invs, snap)
+            else:
+                idx, ok = res
+                plats = snap.platforms
+                fast = [(fn, idxs,
+                         plats[int(idx[g])] if ok[g] else None)
+                        for g, (fn, idxs) in enumerate(groups)]
 
         accepted = 0
         pname_groups: Dict[str, List[Invocation]] = {}
-        pred_cache: Dict[Tuple[str, str], float] = {}
-        rows: List[Dict] = []
-        policy_name = self.policy.name
+        # (target, members) per (fn, platform) — ONE hedge timer each
+        hedge_groups: List[Tuple[TargetPlatform, List[Invocation]]] = []
         log_decisions = self.kb.log_decisions
-        for inv, target in zip(invs, targets):
-            if target is None:
-                inv.status = "failed"
-                self._reject(inv)
-                continue
-            pname = target.prof.name
-            if log_decisions:
-                key = (inv.fn.name, pname)
-                pred = pred_cache.get(key)
-                if pred is None:
-                    pred = self.perf.predict_exec(inv.fn, target.prof)
-                    pred_cache[key] = pred
-                rows.append({"t": now, "fn": inv.fn.name,
-                             "platform": pname, "policy": policy_name,
-                             "predicted_s": pred})
-            group = pname_groups.get(pname)
-            if group is None:
-                pname_groups[pname] = [inv]
-            else:
-                group.append(inv)
-            accepted += 1
-        if log_decisions:
-            self.kb.record_decisions(rows)
-        else:
+        want_hedges = self.hedge.enabled
+        if fast is not None and not log_decisions:
+            # production path: admission grouped per distinct function
+            # (arrivals inside one batch are simultaneous — group order
+            # is the documented deterministic tie-break)
+            for fn, idxs, target in fast:
+                if target is None:
+                    for i in idxs:
+                        inv = invs[i]
+                        inv.status = "failed"
+                        self._reject(inv)
+                    continue
+                members = [invs[i] for i in idxs]
+                if want_hedges:
+                    hedge_groups.append((target, members))
+                pname = target.prof.name
+                group = pname_groups.get(pname)
+                if group is None:
+                    # hedge groups keep `members` — hand the platform
+                    # group a copy so later extends don't alias into it
+                    pname_groups[pname] = members[:] if want_hedges \
+                        else members
+                else:
+                    group.extend(members)
+                accepted += len(members)
             self.kb.count_decisions(accepted)
-        for pname, group in pname_groups.items():
-            self.sidecars[pname].admit_many(group)
-        if self.hedge.enabled:
+        else:
+            # debug/stateful path: strict arrival order (knowledge-base
+            # rows match sequential submits row for row)
+            if targets is None:
+                targets = [None] * n
+                for fn, idxs, target in fast:
+                    if target is not None:
+                        for i in idxs:
+                            targets[i] = target
+            pred_cache: Dict[Tuple[str, str], float] = {}
+            rows: List[Dict] = []
+            policy_name = self.policy.name
+            hgroups: Dict[Tuple[int, str],
+                          Tuple[TargetPlatform, List[Invocation]]] = {}
             for inv, target in zip(invs, targets):
                 if target is None:
+                    inv.status = "failed"
+                    self._reject(inv)
                     continue
-                alternates = [p for p in alive if p is not target]
-                self.hedge.watch(
-                    inv, target, alternates,
-                    lambda i, p: self.sidecars[p.prof.name].admit(i))
+                pname = target.prof.name
+                if log_decisions:
+                    key = (inv.fn.name, pname)
+                    pred = pred_cache.get(key)
+                    if pred is None:
+                        pred = self.perf.predict_exec(inv.fn, target.prof)
+                        pred_cache[key] = pred
+                    rows.append({"t": now, "fn": inv.fn.name,
+                                 "platform": pname, "policy": policy_name,
+                                 "predicted_s": pred})
+                group = pname_groups.get(pname)
+                if group is None:
+                    pname_groups[pname] = [inv]
+                else:
+                    group.append(inv)
+                if want_hedges:
+                    hkey = (id(inv.fn), pname)
+                    entry = hgroups.get(hkey)
+                    if entry is None:
+                        hgroups[hkey] = (target, [inv])
+                    else:
+                        entry[1].append(inv)
+                accepted += 1
+            if log_decisions:
+                self.kb.record_decisions(rows)
+            else:
+                self.kb.count_decisions(accepted)
+            hedge_groups.extend(hgroups.values())
+
+        for pname, group in pname_groups.items():
+            self.sidecars[pname].admit_many(group)
+        if want_hedges:
+            alt_cache: Dict[str, List[TargetPlatform]] = {}
+            for target, members in hedge_groups:
+                pname = target.prof.name
+                alternates = alt_cache.get(pname)
+                if alternates is None:
+                    alternates = [p for p in alive if p is not target]
+                    alt_cache[pname] = alternates
+                self.hedge.watch_group(members, target, alternates,
+                                       self._admit_hedges)
         return accepted
+
+    def _admit_hedges(self, dups: List[Invocation],
+                      platform: TargetPlatform):
+        """Batch-admit speculative duplicates at their alternate platform
+        (hedge traffic bypasses arrival recording, like the scalar path)."""
+        self.sidecars[platform.prof.name].admit_many(dups)
 
     def _reject(self, inv: Invocation):
         self.rejected_count += 1

@@ -168,11 +168,14 @@ class DataPlacementManager:
             cache.put(key, size)
         return t
 
-    def record_access(self, fn: str, key: str, write: bool = False):
+    def record_access(self, fn: str, key: str, write: bool = False,
+                      count: int = 1):
+        """Instrument ``count`` accesses at once (a drained burst makes
+        one call per (fn, object) instead of one per invocation)."""
         if write:
-            self.access_model.record_write(fn, key)
+            self.access_model.record_write(fn, key, count)
         else:
-            self.access_model.record_read(fn, key)
+            self.access_model.record_read(fn, key, count)
 
     # -------------------------------------------------------- migration ---
     def migrate(self, key: str, to_loc: str):

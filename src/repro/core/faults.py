@@ -81,7 +81,21 @@ class Redeliverer:
 
 
 class HedgePolicy:
-    """Speculative duplicates after k x predicted P90 (straggler cut)."""
+    """Speculative duplicates after k x predicted P90 (straggler cut).
+
+    Two watch granularities:
+      * ``watch``       — one timer per invocation (the scalar path);
+      * ``watch_group`` — ONE timer per (fn, platform) admission group: a
+        burst of 10^4 admissions arms a handful of timers instead of 10^4,
+        and the still-pending stragglers are duplicated and re-admitted as
+        a single batch.  Equivalent to per-invocation watchers (same
+        budget, same fire instant — every member of an admission group
+        shares arrival time, function and platform).
+
+    ``on_duplicate`` callbacks fire for every speculative duplicate
+    created — the chain executor uses this to let a winning duplicate
+    complete its stage.
+    """
 
     def __init__(self, clock: SimClock, perf: FunctionPerformanceModel,
                  k: float = 2.0, enabled: bool = True):
@@ -92,36 +106,76 @@ class HedgePolicy:
         self.hedges_sent = 0
         self.hedges_won = 0
         self._done: Dict[int, bool] = {}
+        self.on_duplicate: List[Callable[[Invocation, Invocation],
+                                         None]] = []
+
+    def _budget(self, fn, platform: TargetPlatform) -> Optional[float]:
+        """Hedge delay, or None while the model lacks real latency
+        observations — otherwise analytic estimates under cold starts
+        cause hedge storms."""
+        obs = self.perf.resp_p90.get((fn.name, platform.prof.name))
+        if obs is None or obs.count < 10:
+            return None
+        return self.k * max(
+            self.perf.predict_p90_response(fn, platform.prof), 1e-3)
+
+    def _make_dup(self, inv: Invocation) -> Invocation:
+        dup = Invocation(inv.fn, self.clock.now(), vu=inv.vu,
+                         args=inv.args)
+        dup.hedged_from = inv.id
+        self.hedges_sent += 1
+        for cb in self.on_duplicate:
+            cb(inv, dup)
+        return dup
 
     def watch(self, inv: Invocation, platform: TargetPlatform,
               alternates: List[TargetPlatform],
               submit: Callable[[Invocation, TargetPlatform], None]):
         if not self.enabled or not alternates:
             return
-        # only hedge once the model has real latency observations —
-        # otherwise analytic estimates under cold starts cause hedge storms
-        key = (inv.fn.name, platform.prof.name)
-        obs = self.perf.resp_p90.get(key)
-        if obs is None or obs.count < 10:
+        budget = self._budget(inv.fn, platform)
+        if budget is None:
             return
-        budget = self.k * max(
-            self.perf.predict_p90_response(inv.fn, platform.prof), 1e-3)
         self._done[inv.id] = False
 
         def maybe_hedge():
             if self._done.get(inv.id) or inv.status == "done":
                 self._done.pop(inv.id, None)
                 return
-            alt = alternates[0]
-            dup = Invocation(inv.fn, self.clock.now(), vu=inv.vu,
-                             args=inv.args)
-            dup.hedged_from = inv.id
-            self.hedges_sent += 1
-            submit(dup, alt)
+            submit(self._make_dup(inv), alternates[0])
 
         self.clock.after(budget, maybe_hedge)
+
+    def watch_group(self, invs: List[Invocation],
+                    platform: TargetPlatform,
+                    alternates: List[TargetPlatform],
+                    submit_many: Callable[[List[Invocation],
+                                           TargetPlatform], None]):
+        """One vectorized hedge timer for a whole (fn, platform) admission
+        group; stragglers are duplicated in admission order and batch-
+        submitted to the best alternate."""
+        if not self.enabled or not alternates or not invs:
+            return
+        budget = self._budget(invs[0].fn, platform)
+        if budget is None:
+            return
+
+        def maybe_hedge_group():
+            dups = []
+            for inv in invs:
+                if self._done.pop(inv.id, False) or inv.status == "done":
+                    continue
+                dups.append(self._make_dup(inv))
+            if dups:
+                submit_many(dups, alternates[0])
+
+        self.clock.after(budget, maybe_hedge_group)
 
     def completed(self, inv: Invocation):
         if inv.hedged_from is not None:
             self.hedges_won += 1
-        self._done[inv.id] = True
+        # only flip invocations a per-invocation watcher registered —
+        # unconditional inserts would grow the dict by one entry per
+        # completion forever (group timers read ``status`` instead)
+        if inv.id in self._done:
+            self._done[inv.id] = True

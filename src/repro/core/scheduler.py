@@ -16,6 +16,25 @@ Policies are *vectorized*: the platform set is snapshotted once into
 columnar NumPy arrays (``PlatformSnapshot``) and each policy produces a
 ``score(invs, snapshot) -> (N, P)`` cost matrix in one pass, so a whole
 arrival batch is routed with array ops instead of N x P Python calls.
+
+A batch admission decision additionally collapses to one row per
+*distinct function* (policy cost depends on the FunctionSpec, not on
+which invocation carries it): ``fn_decisions`` evaluates the filter
+cascade + cost + argmin once per (function, platform-set) and the batch
+router broadcasts the per-function choice to every invocation of that
+function.  The cascade runs on one of two backends:
+
+  * ``numpy`` — host arrays (the historical path; always available);
+  * ``jax``   — the ``jax.jit``-compiled cascades in
+    ``repro.kernels.policy_score`` (with an optional fused Pallas
+    filter+argmin kernel for the composite policy).
+
+``set_score_backend("numpy"|"jax"|"auto")`` selects it; ``auto`` (the
+default) uses jax for batches of at least ``JAX_DECIDE_MIN`` invocations
+and numpy below that (tiny batches are dominated by dispatch overhead).
+Both backends pick byte-identical platforms (tests pin parity on seeded
+scenarios), so the choice is a throughput knob, not a semantic one.
+
 ``choose`` is the batch-of-1 case of ``choose_batch``; row-wise argmin
 breaks ties exactly like the historical per-platform ``min`` scan
 (first-lowest in platform order), so scalar and batch paths pick
@@ -24,7 +43,8 @@ identical platforms.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional, Sequence, Union
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,6 +52,57 @@ from repro.core.behavioral import FunctionPerformanceModel
 from repro.core.data_placement import DataPlacementManager
 from repro.core.platform import TargetPlatform
 from repro.core.types import FunctionSpec, Invocation
+
+# Minimum batch size at which the "auto" backend switches to the jitted
+# cascades (below it, host NumPy wins on dispatch overhead alone).
+JAX_DECIDE_MIN = 64
+
+_SCORE_BACKEND = os.environ.get("FDN_SCORE_BACKEND", "auto")
+
+
+def set_score_backend(mode: str) -> None:
+    """Select the decision backend: "numpy", "jax", or "auto"."""
+    if mode not in ("numpy", "jax", "auto"):
+        raise ValueError(f"unknown score backend {mode!r}")
+    global _SCORE_BACKEND
+    _SCORE_BACKEND = mode
+
+
+def get_score_backend() -> str:
+    return _SCORE_BACKEND
+
+
+_ps_mod = None
+_ps_error: Optional[BaseException] = None
+
+
+def _policy_score_mod():
+    """The jitted-cascade module, or None when jax is unavailable (the
+    NumPy fallback keeps the scheduler fully functional without it)."""
+    global _ps_mod, _ps_error
+    if _ps_mod is None and _ps_error is None:
+        try:
+            from repro.kernels import policy_score as mod
+            _ps_mod = mod
+        except Exception as exc:          # missing/incompatible jax
+            _ps_error = exc
+    return _ps_mod
+
+
+def _use_jax_backend(n: int) -> bool:
+    if _SCORE_BACKEND == "numpy":
+        return False
+    if _SCORE_BACKEND == "auto" and n < JAX_DECIDE_MIN:
+        return False
+    if _policy_score_mod() is None:
+        if _SCORE_BACKEND == "jax":
+            # an explicit jax request must not silently measure (or CI-
+            # gate) the NumPy path — only "auto" may degrade
+            raise RuntimeError(
+                "score backend 'jax' requested but the jitted cascades "
+                "are unavailable") from _ps_error
+        return False
+    return True
 
 
 class FnView:
@@ -118,6 +189,35 @@ class PlatformSnapshot:
                                        for pr in self.profs])
         return v
 
+    def fn_matrix(self, fns: Sequence[FunctionSpec],
+                  perf: Optional[FunctionPerformanceModel] = None,
+                  placement: Optional[DataPlacementManager] = None,
+                  p90: bool = False, energy: bool = False
+                  ) -> Dict[str, np.ndarray]:
+        """(F, P) matrices stacked from the per-function views — the
+        columnar input the jitted decision cascades consume."""
+        views = [self.fn_view(fn, perf, placement, p90=p90, energy=energy)
+                 for fn in fns]
+        if len(views) == 1:                  # scalar choose: views, no copy
+            v = views[0]
+            out = {"alive": v.alive[None], "data_s": v.data_s[None]}
+            if perf is not None:
+                out["exec_s"] = v.exec_s[None]
+                if p90:
+                    out["p90_s"] = v.p90_s[None]
+                if energy:
+                    out["energy_j"] = v.energy_j[None]
+            return out
+        out = {"alive": np.stack([v.alive for v in views]),
+               "data_s": np.stack([v.data_s for v in views])}
+        if perf is not None:
+            out["exec_s"] = np.stack([v.exec_s for v in views])
+            if p90:
+                out["p90_s"] = np.stack([v.p90_s for v in views])
+            if energy:
+                out["energy_j"] = np.stack([v.energy_j for v in views])
+        return out
+
 
 PlatformsLike = Union[PlatformSnapshot, Sequence[TargetPlatform]]
 
@@ -126,6 +226,23 @@ def as_snapshot(platforms: PlatformsLike) -> PlatformSnapshot:
     if isinstance(platforms, PlatformSnapshot):
         return platforms
     return PlatformSnapshot(platforms)
+
+
+def group_by_fn(invs: Sequence[Invocation]
+                ) -> List[Tuple[FunctionSpec, List[int]]]:
+    """Distinct functions (by object identity, first-appearance order)
+    with the invocation indices that carry each."""
+    groups: Dict[int, Tuple[FunctionSpec, List[int]]] = {}
+    order: List[Tuple[FunctionSpec, List[int]]] = []
+    for i, inv in enumerate(invs):
+        g = groups.get(id(inv.fn))
+        if g is None:
+            g = (inv.fn, [i])
+            groups[id(inv.fn)] = g
+            order.append(g)
+        else:
+            g[1].append(i)
+    return order
 
 
 class _SpecInv:
@@ -143,10 +260,50 @@ class Policy:
     name = "base"
 
     # ------------------------------------------------- vectorized core ---
+    def fn_cost_matrix(self, fns: Sequence[FunctionSpec],
+                       snap: PlatformSnapshot) -> Optional[np.ndarray]:
+        """(F, P) masked cost matrix, one row per distinct function
+        (np.inf marks an infeasible pairing) — or None for policies whose
+        score is per-invocation stateful (rotation policies)."""
+        return None
+
+    def _jax_decide(self, fns: Sequence[FunctionSpec],
+                    snap: PlatformSnapshot
+                    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Jitted-cascade decision (repro.kernels.policy_score), or None
+        when this policy has no compiled variant."""
+        return None
+
+    def fn_decisions(self, fns: Sequence[FunctionSpec],
+                     snap: PlatformSnapshot, n: Optional[int] = None
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Fused decision per distinct function: (platform index, any-
+        feasible) arrays of shape (F,).  ``n`` is the size of the batch
+        being routed (backend selection under "auto").  Returns None for
+        stateful policies — callers fall back to the full score matrix.
+        """
+        if _use_jax_backend(len(fns) if n is None else n):
+            res = self._jax_decide(fns, snap)
+            if res is not None:
+                return np.asarray(res[0]), np.asarray(res[1])
+        rows = self.fn_cost_matrix(fns, snap)
+        if rows is None:
+            return None
+        finite = np.isfinite(rows)
+        return (np.argmin(np.where(finite, rows, np.inf), axis=1),
+                finite.any(axis=1))
+
     def score(self, invs: Sequence[Invocation],
               snap: PlatformSnapshot) -> np.ndarray:
         """(N, P) cost matrix; np.inf marks an infeasible pairing."""
-        raise NotImplementedError
+        groups = group_by_fn(invs)
+        rows = self.fn_cost_matrix([g[0] for g in groups], snap)
+        if rows is None:
+            raise NotImplementedError
+        out = np.empty((len(invs), snap.n))
+        for g, (_fn, idxs) in enumerate(groups):
+            out[idxs] = rows[g]
+        return out
 
     def score_specs(self, specs: Sequence[FunctionSpec],
                     platforms: PlatformsLike) -> np.ndarray:
@@ -158,39 +315,36 @@ class Policy:
     def choose_batch(self, invs: Sequence[Invocation],
                      platforms: PlatformsLike
                      ) -> List[Optional[TargetPlatform]]:
-        """Route a whole batch in one policy evaluation (row-wise argmin)."""
+        """Route a whole batch in one policy evaluation.
+
+        Stateless policies collapse to one fused decision per distinct
+        function (``fn_decisions``); stateful ones keep the historical
+        full-matrix row-wise argmin.  Both break ties first-lowest."""
         snap = as_snapshot(platforms)
         if not invs or snap.n == 0:
             return [None] * len(invs)
-        costs = self.score(invs, snap)
-        finite = np.isfinite(costs)
-        any_ok = finite.any(axis=1)
-        idx = np.argmin(np.where(finite, costs, np.inf), axis=1)
+        groups = group_by_fn(invs)
+        res = self.fn_decisions([g[0] for g in groups], snap, n=len(invs))
         plats = snap.platforms
-        return [plats[j] if ok else None
-                for j, ok in zip(idx.tolist(), any_ok.tolist())]
+        if res is None:
+            costs = self.score(invs, snap)
+            finite = np.isfinite(costs)
+            any_ok = finite.any(axis=1)
+            idx = np.argmin(np.where(finite, costs, np.inf), axis=1)
+            return [plats[j] if ok else None
+                    for j, ok in zip(idx.tolist(), any_ok.tolist())]
+        idx, ok_arr = res
+        out: List[Optional[TargetPlatform]] = [None] * len(invs)
+        for g, (_fn, idxs) in enumerate(groups):
+            if ok_arr[g]:
+                p = plats[int(idx[g])]
+                for i in idxs:
+                    out[i] = p
+        return out
 
     def choose(self, inv: Invocation,
                platforms: PlatformsLike) -> Optional[TargetPlatform]:
         return self.choose_batch([inv], platforms)[0]
-
-    # --------------------------------------------------------- helpers ---
-    def _per_fn_rows(self, invs: Sequence[Invocation],
-                     snap: PlatformSnapshot, row_fn) -> np.ndarray:
-        """Assemble the (N, P) matrix from one cost row per distinct
-        function (policy cost depends on the FunctionSpec, not on which
-        invocation carries it)."""
-        out = np.empty((len(invs), snap.n))
-        groups: Dict[int, tuple] = {}
-        for i, inv in enumerate(invs):
-            g = groups.get(id(inv.fn))
-            if g is None:
-                groups[id(inv.fn)] = (inv.fn, [i])
-            else:
-                g[1].append(i)
-        for fn, idxs in groups.values():
-            out[idxs] = row_fn(fn)
-        return out
 
 
 def _masked(cost: np.ndarray, mask: np.ndarray) -> np.ndarray:
@@ -203,11 +357,14 @@ class PerformanceRankedPolicy(Policy):
     def __init__(self, perf: FunctionPerformanceModel):
         self.perf = perf
 
-    def score(self, invs, snap):
-        def row(fn):
-            v = snap.fn_view(fn, self.perf)
-            return _masked(v.exec_s, v.alive)
-        return self._per_fn_rows(invs, snap, row)
+    def fn_cost_matrix(self, fns, snap):
+        m = snap.fn_matrix(fns, self.perf)
+        return _masked(m["exec_s"], m["alive"])
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = snap.fn_matrix(fns, self.perf)
+        return ps.perf_ranked_decide(m["exec_s"], m["alive"])
 
 
 class UtilizationAwarePolicy(Policy):
@@ -219,17 +376,21 @@ class UtilizationAwarePolicy(Policy):
         self.cpu_threshold = cpu_threshold
         self.mem_threshold = mem_threshold
 
-    def score(self, invs, snap):
-        unloaded = (snap.cpu_util < self.cpu_threshold) & \
+    def _unloaded(self, snap):
+        return (snap.cpu_util < self.cpu_threshold) & \
             (snap.mem_util < self.mem_threshold)
 
-        def row(fn):
-            v = snap.fn_view(fn, self.perf)
-            ok = v.alive & unloaded
-            if not ok.any():                    # degrade gracefully
-                ok = v.alive
-            return _masked(v.exec_s, ok)
-        return self._per_fn_rows(invs, snap, row)
+    def fn_cost_matrix(self, fns, snap):
+        m = snap.fn_matrix(fns, self.perf)
+        ok = m["alive"] & self._unloaded(snap)[None, :]
+        ok = np.where(ok.any(axis=1, keepdims=True), ok, m["alive"])
+        return _masked(m["exec_s"], ok)
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = snap.fn_matrix(fns, self.perf)
+        return ps.utilization_decide(m["exec_s"], m["alive"],
+                                     self._unloaded(snap))
 
 
 class RoundRobinCollaboration(Policy):
@@ -312,11 +473,18 @@ class DataLocalityPolicy(Policy):
         self.perf = perf
         self.placement = placement
 
-    def score(self, invs, snap):
-        def row(fn):
-            v = snap.fn_view(fn, self.perf, self.placement)
-            return _masked(v.exec_s + v.data_s, v.alive)
-        return self._per_fn_rows(invs, snap, row)
+    def fn_cost_matrix(self, fns, snap):
+        m = snap.fn_matrix(fns, self.perf, self.placement)
+        return _masked(m["exec_s"] + m["data_s"], m["alive"])
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = snap.fn_matrix(fns, self.perf, self.placement)
+        return ps.locality_decide(m["exec_s"], m["data_s"], m["alive"])
+
+
+def _slo_vector(fns: Sequence[FunctionSpec]) -> np.ndarray:
+    return np.array([fn.slo.p90_response_s for fn in fns])
 
 
 class EnergyAwarePolicy(Policy):
@@ -327,14 +495,18 @@ class EnergyAwarePolicy(Policy):
     def __init__(self, perf: FunctionPerformanceModel):
         self.perf = perf
 
-    def score(self, invs, snap):
-        def row(fn):
-            v = snap.fn_view(fn, self.perf, p90=True, energy=True)
-            feasible = v.alive & (v.p90_s <= fn.slo.p90_response_s)
-            if not feasible.any():
-                feasible = v.alive
-            return _masked(v.energy_j, feasible)
-        return self._per_fn_rows(invs, snap, row)
+    def fn_cost_matrix(self, fns, snap):
+        m = snap.fn_matrix(fns, self.perf, p90=True, energy=True)
+        feasible = m["alive"] & (m["p90_s"] <= _slo_vector(fns)[:, None])
+        feasible = np.where(feasible.any(axis=1, keepdims=True), feasible,
+                            m["alive"])
+        return _masked(m["energy_j"], feasible)
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = snap.fn_matrix(fns, self.perf, p90=True, energy=True)
+        return ps.energy_decide(m["energy_j"], m["p90_s"],
+                                _slo_vector(fns), m["alive"])
 
 
 class SLOCompositePolicy(Policy):
@@ -342,6 +514,7 @@ class SLOCompositePolicy(Policy):
     reduced to a filter cascade over the snapshot's columns:
     utilization mask -> SLO-feasibility mask -> locality-adjusted latency
     + energy tie-break."""
+
     name = "slo_composite"
 
     def __init__(self, perf: FunctionPerformanceModel,
@@ -354,25 +527,36 @@ class SLOCompositePolicy(Policy):
         self.mem_threshold = mem_threshold
         self.energy_weight = energy_weight
 
-    def score(self, invs, snap):
-        unloaded = (snap.cpu_util < self.cpu_threshold) & \
+    def _unloaded(self, snap):
+        return (snap.cpu_util < self.cpu_threshold) & \
             (snap.mem_util < self.mem_threshold)
 
-        def row(fn):
-            v = snap.fn_view(fn, self.perf, self.placement,
-                             p90=True, energy=True)
-            # (1) utilization filter (§5.1.2)
-            ok = v.alive & unloaded
-            if not ok.any():
-                ok = v.alive
-            # (2) SLO feasibility (§5.1.1)
-            feasible = ok & (v.p90_s <= fn.slo.p90_response_s)
-            if not feasible.any():
-                feasible = ok
-            # (3) locality-adjusted latency + energy tie-break (§5.1.4, §5.2)
-            cost = (v.exec_s + v.data_s) + self.energy_weight * v.energy_j
-            return _masked(cost, feasible)
-        return self._per_fn_rows(invs, snap, row)
+    def _columns(self, fns, snap):
+        return snap.fn_matrix(fns, self.perf, self.placement,
+                              p90=True, energy=True)
+
+    def fn_cost_matrix(self, fns, snap):
+        m = self._columns(fns, snap)
+        # (1) utilization filter (§5.1.2)
+        ok = m["alive"] & self._unloaded(snap)[None, :]
+        ok = np.where(ok.any(axis=1, keepdims=True), ok, m["alive"])
+        # (2) SLO feasibility (§5.1.1)
+        feasible = ok & (m["p90_s"] <= _slo_vector(fns)[:, None])
+        feasible = np.where(feasible.any(axis=1, keepdims=True), feasible,
+                            ok)
+        # (3) locality-adjusted latency + energy tie-break (§5.1.4, §5.2)
+        cost = (m["exec_s"] + m["data_s"]) + \
+            self.energy_weight * m["energy_j"]
+        return _masked(cost, feasible)
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = self._columns(fns, snap)
+        args = (m["exec_s"], m["data_s"], m["p90_s"], m["energy_j"],
+                m["alive"], self._unloaded(snap), _slo_vector(fns))
+        if ps.use_pallas():
+            return ps.composite_decide_pallas(*args, self.energy_weight)
+        return ps.composite_decide(*args, self.energy_weight)
 
 
 POLICIES = {cls.name: cls for cls in

@@ -9,7 +9,7 @@ violate the SLO).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.behavioral import FunctionPerformanceModel
 from repro.core.platform import TargetPlatform
@@ -43,19 +43,57 @@ class SidecarController:
         self.platform.invoke_batch(invs)
 
     # local trigger path -------------------------------------------------
+    def _pressured(self) -> bool:
+        p = self.platform
+        return (p.failed or p.cpu_util() >= self.cpu_threshold
+                or p.mem_util() >= 1.0)
+
+    def _slo_risk(self, fn) -> bool:
+        return (self.perf is not None and
+                self.perf.predict_p90_response(fn, self.platform.prof)
+                > fn.slo.p90_response_s)
+
     def handle_local_trigger(self, inv: Invocation,
                              delegate: Callable[[Invocation], None]):
         """§3.2: run locally unless pressure/SLO says delegate upward."""
         p = self.platform
-        pressured = (p.failed or p.cpu_util() >= self.cpu_threshold
-                     or p.mem_util() >= 1.0)
-        slo_risk = False
-        if self.perf is not None and not pressured:
-            slo_risk = (self.perf.predict_p90_response(inv.fn, p.prof)
-                        > inv.fn.slo.p90_response_s)
+        pressured = self._pressured()
+        slo_risk = not pressured and self._slo_risk(inv.fn)
         if pressured or slo_risk or inv.fn.name not in p.deployed:
             self.delegated += 1
             delegate(inv)
         else:
             self.local += 1
             p.invoke(inv)
+
+    def handle_local_triggers(self, invs: Sequence[Invocation],
+                              delegate_batch: Callable[
+                                  [Sequence[Invocation]], None]):
+        """Batched §3.2 decision for a burst of locally triggered
+        invocations: platform pressure is sampled once, SLO risk once per
+        distinct function, and the burst splits into one local
+        ``invoke_batch`` plus one upward ``delegate_batch`` — the local-
+        trigger mirror of the control plane's grouped admission."""
+        if not invs:
+            return
+        p = self.platform
+        pressured = self._pressured()
+        local: List[Invocation] = []
+        delegated: List[Invocation] = []
+        risk_by_fn: Dict[int, bool] = {}
+        for inv in invs:
+            fn = inv.fn
+            if pressured or fn.name not in p.deployed:
+                delegated.append(inv)
+                continue
+            risk = risk_by_fn.get(id(fn))
+            if risk is None:
+                risk = self._slo_risk(fn)
+                risk_by_fn[id(fn)] = risk
+            (delegated if risk else local).append(inv)
+        self.delegated += len(delegated)
+        self.local += len(local)
+        if local:
+            p.invoke_batch(local)
+        if delegated:
+            delegate_batch(delegated)

@@ -1,0 +1,192 @@
+"""Jitted admission decisions: the Scheduler's policy filter cascades,
+cost matrices and argmin compiled with ``jax.jit`` over the columnar
+``PlatformSnapshot`` (paper §3.1.3).
+
+Each function takes per-distinct-function matrices of shape (F, P) —
+F functions being decided, P candidate platforms — plus per-platform or
+per-function vectors, and returns the fused decision
+
+    (choice: (F,) int32 platform index, ok: (F,) bool any-feasible)
+
+with ties broken to the lowest platform index, exactly like the NumPy
+``Policy.score`` + row-argmin path in ``repro.core.scheduler`` (which
+stays as the fallback and the parity oracle — tests assert byte-identical
+platform choices under both backends).  Caveat: without jax x64, the
+cascades compute in float32 while the oracle is float64 — costs within
+float32 eps of each other could in principle flip an argmin.  Parity is
+pinned empirically on every registry scenario; if a live workload ever
+manufactures such a near-tie, prefer the numpy backend.
+
+The graceful-degrade cascades mirror the host policies:
+  * utilization filter: drop loaded platforms unless that empties a row;
+  * SLO feasibility: drop SLO-violating platforms unless that empties a
+    row (per function).
+
+``composite_decide`` additionally has a Pallas kernel variant fusing the
+whole filter cascade + argmin in one VMEM-resident pass
+(``composite_decide_pallas``); on TPU it runs compiled, elsewhere in
+interpret mode.  Shapes are padded to (8, 128) tiles.  It is opt-in via
+``set_use_pallas`` (the jnp path is faster at the tiny F x P of the FDN's
+platform sets; the kernel exists for pod-scale platform registries).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INT = jnp.int32
+
+_use_pallas = False
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def set_use_pallas(enabled: bool) -> None:
+    """Route ``composite_decide`` through the fused Pallas kernel."""
+    global _use_pallas
+    _use_pallas = bool(enabled)
+
+
+def use_pallas() -> bool:
+    return _use_pallas
+
+
+# ---------------------------------------------------------------------------
+# Shared argmin
+# ---------------------------------------------------------------------------
+
+def _masked_argmin(cost: jax.Array, mask: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise argmin of ``where(mask, cost, inf)``; ok marks rows with
+    at least one finite candidate.  First-lowest tie-break matches
+    ``np.argmin`` over the host cost matrices."""
+    masked = jnp.where(mask, cost, jnp.inf)
+    finite = jnp.isfinite(masked)
+    masked = jnp.where(finite, masked, jnp.inf)   # NaN -> inf, like host
+    return (jnp.argmin(masked, axis=1).astype(_INT), finite.any(axis=1))
+
+
+def _degrade(ok: jax.Array, fallback: jax.Array) -> jax.Array:
+    """Per-row graceful degrade: rows where the filter left no candidate
+    fall back to the unfiltered mask."""
+    return jnp.where(ok.any(axis=1, keepdims=True), ok, fallback)
+
+
+# ---------------------------------------------------------------------------
+# Per-policy decisions (jit; shapes (F, P) compile once per shape)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def perf_ranked_decide(exec_s, alive):
+    """§5.1.1: fastest alive platform per function."""
+    return _masked_argmin(exec_s, alive)
+
+
+@jax.jit
+def utilization_decide(exec_s, alive, unloaded):
+    """§5.1.2: fastest among un-pressured platforms (degrade to alive)."""
+    ok = _degrade(alive & unloaded[None, :], alive)
+    return _masked_argmin(exec_s, ok)
+
+
+@jax.jit
+def locality_decide(exec_s, data_s, alive):
+    """§5.1.4: execution + data-access seconds."""
+    return _masked_argmin(exec_s + data_s, alive)
+
+
+@jax.jit
+def energy_decide(energy_j, p90_s, slo_s, alive):
+    """§5.2: cheapest energy among SLO-feasible (degrade to alive)."""
+    feasible = _degrade(alive & (p90_s <= slo_s[:, None]), alive)
+    return _masked_argmin(energy_j, feasible)
+
+
+@jax.jit
+def composite_decide(exec_s, data_s, p90_s, energy_j, alive, unloaded,
+                     slo_s, energy_weight):
+    """The full SLOCompositePolicy cascade: utilization mask -> SLO
+    feasibility -> locality-adjusted latency + energy tie-break."""
+    ok = _degrade(alive & unloaded[None, :], alive)
+    feasible = _degrade(ok & (p90_s <= slo_s[:, None]), ok)
+    cost = (exec_s + data_s) + energy_weight * energy_j
+    return _masked_argmin(cost, feasible)
+
+
+# ---------------------------------------------------------------------------
+# Pallas variant: fused filter cascade + argmin in one kernel
+# ---------------------------------------------------------------------------
+
+def _composite_kernel(exec_ref, data_ref, p90_ref, wenergy_ref, alive_ref,
+                      unloaded_ref, slo_ref, idx_ref, ok_ref):
+    alive = alive_ref[...] > 0
+    ok = alive & (unloaded_ref[...] > 0)
+    ok = jnp.where(ok.any(axis=1, keepdims=True), ok, alive)
+    feasible = ok & (p90_ref[...] <= slo_ref[...])
+    feasible = jnp.where(feasible.any(axis=1, keepdims=True), feasible, ok)
+    cost = (exec_ref[...] + data_ref[...]) + wenergy_ref[...]
+    masked = jnp.where(feasible, cost, jnp.inf)
+    row_min = masked.min(axis=1, keepdims=True)
+    ncols = masked.shape[1]
+    col = jax.lax.broadcasted_iota(_INT, masked.shape, 1)
+    first = jnp.where(masked == row_min, col, ncols).min(
+        axis=1, keepdims=True)
+    idx_ref[...] = jnp.broadcast_to(first, idx_ref.shape)
+    ok_ref[...] = jnp.broadcast_to(
+        jnp.isfinite(row_min).astype(_INT), ok_ref.shape)
+
+
+def _pad2(x, rows: int, cols: int, fill):
+    f, p = x.shape
+    return jnp.pad(x, ((0, rows - f), (0, cols - p)), constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _composite_pallas(exec_s, data_s, p90_s, wenergy, alive, unloaded,
+                      slo_s, *, interpret: bool):
+    f, p = exec_s.shape
+    fp = max(-(-f // 8) * 8, 8)           # sublane multiple
+    pp = max(-(-p // 128) * 128, 128)     # lane multiple
+    f32 = jnp.float32
+    args = (_pad2(exec_s.astype(f32), fp, pp, 0.0),
+            _pad2(data_s.astype(f32), fp, pp, 0.0),
+            _pad2(p90_s.astype(f32), fp, pp, jnp.inf),
+            _pad2(wenergy.astype(f32), fp, pp, 0.0),
+            _pad2(alive.astype(_INT), fp, pp, 0),
+            _pad2(jnp.broadcast_to(unloaded[None, :], (f, p)).astype(_INT),
+                  fp, pp, 0),
+            _pad2(jnp.broadcast_to(slo_s[:, None], (f, p)).astype(f32),
+                  fp, pp, 0.0))
+    idx, ok = pl.pallas_call(
+        _composite_kernel,
+        out_shape=(jax.ShapeDtypeStruct((fp, 128), _INT),
+                   jax.ShapeDtypeStruct((fp, 128), _INT)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY
+                               if interpret else pltpu.VMEM)] * 7,
+        out_specs=(pl.BlockSpec(memory_space=pltpu.ANY
+                                if interpret else pltpu.VMEM),) * 2,
+        interpret=interpret,
+    )(*args)
+    return idx[:f, 0], ok[:f, 0] > 0
+
+
+def composite_decide_pallas(exec_s, data_s, p90_s, energy_j, alive,
+                            unloaded, slo_s, energy_weight,
+                            interpret=None):
+    """Pallas-fused SLOComposite decision; same contract (and the same
+    first-lowest tie-break) as ``composite_decide``."""
+    if interpret is None:
+        interpret = not on_tpu()
+    wenergy = jnp.asarray(energy_weight, jnp.float32) * \
+        jnp.asarray(energy_j, jnp.float32)
+    return _composite_pallas(jnp.asarray(exec_s), jnp.asarray(data_s),
+                             jnp.asarray(p90_s), wenergy,
+                             jnp.asarray(alive), jnp.asarray(unloaded),
+                             jnp.asarray(slo_s), interpret=bool(interpret))
