@@ -1,6 +1,12 @@
 """Fig. 6: all nine Table-1 metrics for nodeinfo at 20 VUs on every
 platform.
 
+Runs through the FDNInspector scenario runner (``registry.fig6_cell``)
+instead of a hand-wired control plane; the per-run stats come from the
+``ScenarioReport`` and the metric *series* (cold-start timing, replica
+ramp, infra visibility) from the control plane behind it
+(``run_scenario_state``).
+
 Paper claims validated here:
   * cold starts happen early, then stop once containers are warm;
   * replica counts ramp up under load;
@@ -11,8 +17,9 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
-                                   run_on_platform)
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry
+from repro.inspector.scenario import run_scenario_state
 
 DURATION = 120.0
 PLATFORMS = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
@@ -23,8 +30,9 @@ def run_bench() -> Tuple[List[Row], List[str]]:
     rows: List[Row] = []
     failures: List[str] = []
     for pname in PLATFORMS:
-        cp, gw, fns = build_fdn()
-        res = run_on_platform(cp, gw, fns["nodeinfo"], pname, 20, DURATION)
+        rep, cp, _sink = run_scenario_state(
+            registry.fig6_cell(pname, DURATION))
+        stats = rep.per_platform[pname]
         m = cp.metrics
         cold = m.series(pname, "nodeinfo", "cold_starts", "sum")
         reqs = m.series(pname, "nodeinfo", "requests", "count")
@@ -34,8 +42,7 @@ def run_bench() -> Tuple[List[Row], List[str]]:
                  f"windows={len(reqs)};"
                  f"max_replicas={max((v for _, v in replicas), default=0):.0f};"
                  f"infra_visible={int(bool(infra))}")
-        rows.append(result_row(f"fig6/nodeinfo/{pname}/vus20", res,
-                               DURATION, extra))
+        rows.append(scenario_row(rep.scenario["name"], stats, extra))
 
         if cold:
             t_half = DURATION / 2
@@ -49,7 +56,7 @@ def run_bench() -> Tuple[List[Row], List[str]]:
         else:
             check(bool(infra), f"{pname} infra metrics must be visible",
                   failures)
-        check(len(res.completed) > 0, f"{pname} served nothing", failures)
+        check(stats["completed"] > 0, f"{pname} served nothing", failures)
     return rows, failures
 
 

@@ -28,6 +28,7 @@ BENCHES = [
     "bench_sched_throughput",
     "bench_metrics_ingest",
     "bench_chain_throughput",
+    "bench_autoscale",
 ]
 
 

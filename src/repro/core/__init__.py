@@ -21,7 +21,8 @@ from repro.core.scheduler import (POLICIES, PerformanceRankedPolicy,
                                   UtilizationAwarePolicy,
                                   RoundRobinCollaboration,
                                   WeightedCollaboration, DataLocalityPolicy,
-                                  EnergyAwarePolicy, SLOCompositePolicy)
+                                  EnergyAwarePolicy, SLOCompositePolicy,
+                                  WarmAwarePolicy)
 from repro.core.sidecar import SidecarController
 from repro.core.monitoring import (ColumnarWindowSeries, MetricsRegistry,
                                    WindowSeries)
@@ -42,6 +43,7 @@ __all__ = [
     "PerformanceRankedPolicy", "UtilizationAwarePolicy",
     "RoundRobinCollaboration", "WeightedCollaboration",
     "DataLocalityPolicy", "EnergyAwarePolicy", "SLOCompositePolicy",
+    "WarmAwarePolicy",
     "SidecarController", "MetricsRegistry", "ColumnarWindowSeries",
     "WindowSeries", "P2Quantile", "EWMA",
     "EventModel", "FunctionPerformanceModel", "KnowledgeBase",

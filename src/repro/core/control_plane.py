@@ -62,6 +62,10 @@ class FDNControlPlane:
         self.hedge = HedgePolicy(self.clock, self.perf,
                                  enabled=enable_hedging)
         self.predictive_prewarm = predictive_prewarm
+        # warm-pool lifecycle control loop (repro.autoscale); None until
+        # attach_autoscaler — platforms then manage their own keep-alive
+        # via the legacy faas-idler
+        self.autoscaler = None
         # retain_completions=False drops the per-invocation completed and
         # rejected lists (open-loop sinks own the samples; 10^6-invocation
         # scenarios must not retain a million Invocation objects here)
@@ -94,6 +98,8 @@ class FDNControlPlane:
         platform.on_fail.append(self._on_fail)
         self.detector.heartbeat(name)
         self._schedule_heartbeat(platform)
+        if self.autoscaler is not None:
+            self.autoscaler.adopt(platform)
         return platform
 
     def _schedule_heartbeat(self, platform: TargetPlatform):
@@ -382,6 +388,27 @@ class FDNControlPlane:
         have = target.replica_count(fn.name)
         if want > have:
             target.prewarm(fn.name, min(want - have, 8))
+
+    # -------------------------------------------------------- autoscale ---
+    def attach_autoscaler(self, policy: str = "predictive",
+                          tick_s: float = 1.0,
+                          backend: Optional[str] = None,
+                          policy_kwargs: Optional[Dict] = None,
+                          start: bool = True):
+        """Attach the warm-pool lifecycle controller (repro.autoscale):
+        takes over keep-alive from every platform's faas-idler and drives
+        prewarm/retire pool transitions from the named keep-alive policy
+        ("ttl" | "scale_to_zero" | "concurrency" | "predictive")."""
+        from repro.autoscale import WarmPoolController, make_policy
+        kw = dict(policy_kwargs or {})
+        if backend is not None:
+            kw["backend"] = backend
+        self.autoscaler = WarmPoolController(
+            self.platforms, self.perf, self.clock,
+            make_policy(policy, **kw), tick_s=tick_s).attach()
+        if start:
+            self.autoscaler.start()
+        return self.autoscaler
 
     # ----------------------------------------------------------- chains ---
     def chain_executor(self, fns: Dict[str, FunctionSpec], **kw):

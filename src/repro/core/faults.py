@@ -92,6 +92,14 @@ class HedgePolicy:
         budget, same fire instant — every member of an admission group
         shares arrival time, function and platform).
 
+    Group timers are *cancellable*: every armed group registers its
+    members in a timer index, completions tick the group's pending count
+    down, and when the last member finishes before the hedge budget the
+    timer is dropped from the clock (the closure and its captured batch
+    are freed immediately) instead of firing as a no-op.  Under sustained
+    bursts that keeps the live-timer count proportional to the number of
+    *straggling* groups, not the number of admitted groups.
+
     ``on_duplicate`` callbacks fire for every speculative duplicate
     created — the chain executor uses this to let a winning duplicate
     complete its stage.
@@ -105,9 +113,20 @@ class HedgePolicy:
         self.enabled = enabled
         self.hedges_sent = 0
         self.hedges_won = 0
+        self.group_timers_armed = 0
+        self.group_timers_cancelled = 0
+        self._live_groups = 0
         self._done: Dict[int, bool] = {}
+        # cancellable group-timer index: inv.id -> its group's shared
+        # record [pending_count, member_ids, TimerHandle]
+        self._groups: Dict[int, list] = {}
         self.on_duplicate: List[Callable[[Invocation, Invocation],
                                          None]] = []
+
+    def live_group_timers(self) -> int:
+        """Armed group timers that have neither fired nor been cancelled
+        (== groups with at least one still-pending member)."""
+        return self._live_groups
 
     def _budget(self, fn, platform: TargetPlatform) -> Optional[float]:
         """Hedge delay, or None while the model lacks real latency
@@ -153,29 +172,49 @@ class HedgePolicy:
                                            TargetPlatform], None]):
         """One vectorized hedge timer for a whole (fn, platform) admission
         group; stragglers are duplicated in admission order and batch-
-        submitted to the best alternate."""
+        submitted to the best alternate.  The timer is indexed by member:
+        when every member completes before the budget it is cancelled and
+        dropped from the clock instead of firing as a no-op."""
         if not self.enabled or not alternates or not invs:
             return
         budget = self._budget(invs[0].fn, platform)
         if budget is None:
             return
+        member_ids = [inv.id for inv in invs]
+        group = [len(invs), member_ids, None]
+        groups = self._groups
 
         def maybe_hedge_group():
+            self._live_groups -= 1
             dups = []
             for inv in invs:
-                if self._done.pop(inv.id, False) or inv.status == "done":
+                groups.pop(inv.id, None)
+                if inv.status == "done":
                     continue
                 dups.append(self._make_dup(inv))
             if dups:
                 submit_many(dups, alternates[0])
 
-        self.clock.after(budget, maybe_hedge_group)
+        group[2] = self.clock.after_cancellable(budget, maybe_hedge_group)
+        for iid in member_ids:
+            groups[iid] = group
+        self.group_timers_armed += 1
+        self._live_groups += 1
 
     def completed(self, inv: Invocation):
         if inv.hedged_from is not None:
             self.hedges_won += 1
         # only flip invocations a per-invocation watcher registered —
         # unconditional inserts would grow the dict by one entry per
-        # completion forever (group timers read ``status`` instead)
+        # completion forever (group timers use the cancellable index)
         if inv.id in self._done:
             self._done[inv.id] = True
+        group = self._groups.pop(inv.id, None)
+        if group is not None:
+            group[0] -= 1
+            if group[0] <= 0:            # last member: drop the timer
+                group[2].cancel()
+                self.group_timers_cancelled += 1
+                self._live_groups -= 1
+                for iid in group[1]:
+                    self._groups.pop(iid, None)

@@ -106,6 +106,20 @@ class TargetPlatform:
         self._busy = 0
         self._free: Dict[str, Dict[str, List[Replica]]] = {}
         self._mem_replicas_mb = 0.0
+        # warm-pool accounting (repro.autoscale): exact per-function idle
+        # replica counts by lifecycle state (free pools keep lazily-
+        # skipped stale entries, so they cannot be counted directly), a
+        # running idle total for keep-alive energy, and a generation
+        # counter so the warm-pool controller can cache its row view
+        self._idle_counts: Dict[str, Dict[str, int]] = {}
+        self._idle_total = 0
+        self.idle_gen = 0
+        # set by the warm-pool controller: per-function admission counts
+        # it drains every tick (None == autoscaling off, zero hot-path
+        # cost), and a flag disabling the platform's own faas-idler so
+        # the controller owns the keep-alive decision
+        self.autoscale_counts: Optional[Dict[str, int]] = None
+        self.managed_keepalive = False
         self.queue: deque = deque()
         self.deployed: Dict[str, FunctionSpec] = {}
         self.failed = False
@@ -142,14 +156,47 @@ class TargetPlatform:
         if spec is not None:
             self._mem_replicas_mb -= len(reps) * spec.memory_mb
         for r in reps:
-            if r.busy and not r.retired:
-                self._busy -= 1
+            if not r.retired:
+                if r.busy:
+                    self._busy -= 1
+                else:
+                    self._idle_sub(fn_name, r.state)
             r.retired = True
         self._free.pop(fn_name, None)
+        self._idle_counts.pop(fn_name, None)
 
     # ------------------------------------------------------- accounting ---
     def busy_replicas(self) -> int:
         return self._busy
+
+    def _idle_pools(self, fn: str) -> Dict[str, int]:
+        counts = self._idle_counts.get(fn)
+        if counts is None:
+            counts = {WARM: 0, PREWARM: 0, COLD: 0}
+            self._idle_counts[fn] = counts
+        return counts
+
+    def _idle_add(self, fn: str, state: str):
+        self._idle_pools(fn)[state] += 1
+        self._idle_total += 1
+        self.idle_gen += 1
+
+    def _idle_sub(self, fn: str, state: str):
+        self._idle_pools(fn)[state] -= 1
+        self._idle_total -= 1
+        self.idle_gen += 1
+
+    def idle_warm(self, fn: str) -> int:
+        """Free replicas of ``fn`` that would serve without a cold start
+        (WARM + PREWARM) — O(1), exact (stale free-pool entries excluded)."""
+        counts = self._idle_counts.get(fn)
+        if counts is None:
+            return 0
+        return counts[WARM] + counts[PREWARM]
+
+    def idle_warm_total(self) -> int:
+        """All idle replicas across functions (keep-alive watt accounting)."""
+        return self._idle_total
 
     def _push_free(self, rep: Replica):
         pools = self._free.get(rep.fn)
@@ -157,6 +204,7 @@ class TargetPlatform:
             pools = {WARM: [], PREWARM: [], COLD: []}
             self._free[rep.fn] = pools
         pools[rep.state].append(rep)
+        self._idle_add(rep.fn, rep.state)
 
     def replica_count(self, fn: str) -> int:
         return len(self.replicas[fn])
@@ -174,7 +222,8 @@ class TargetPlatform:
                                                  1))
 
     def _touch_energy(self):
-        self.energy.update(self.prof.name, self.clock.now(), self.cpu_util())
+        self.energy.update(self.prof.name, self.clock.now(), self.cpu_util(),
+                           idle_warm=self._idle_total)
 
     def _sample_infra(self):
         if not self.prof.infra_metrics_visible:
@@ -226,9 +275,11 @@ class TargetPlatform:
         queue_append = self.queue.append
         pname = self.prof.name
         now = self.clock.now()
+        counts = self.autoscale_counts
         queued = False
         for inv in invs:
-            if inv.fn.name not in deployed:
+            name = inv.fn.name
+            if name not in deployed:
                 self._fail(inv, "function not deployed")
                 continue
             inv.platform = pname
@@ -236,6 +287,8 @@ class TargetPlatform:
             inv.status = "queued"
             inflight[inv.id] = inv
             queue_append(inv)
+            if counts is not None:
+                counts[name] = counts.get(name, 0) + 1
             queued = True
         if queued:
             self._drain()
@@ -253,6 +306,10 @@ class TargetPlatform:
         inv.status = "queued"
         self.inflight[inv.id] = inv
         self.queue.append(inv)
+        counts = self.autoscale_counts
+        if counts is not None:
+            name = inv.fn.name
+            counts[name] = counts.get(name, 0) + 1
         return True
 
     def _find_replica(self, fn: str) -> Optional[Replica]:
@@ -268,6 +325,7 @@ class TargetPlatform:
                 r = lst.pop()
                 if r.retired or r.busy or r.state != state:
                     continue
+                self._idle_sub(fn, state)
                 return r
         return None
 
@@ -321,8 +379,11 @@ class TargetPlatform:
                     startups.append(prof.cold_start_s)
                     colds.append(True)
                 elif state == PREWARM:
+                    # a prewarmed container pays only its attach cost and
+                    # does NOT count as a cold start — avoiding the cold
+                    # flag is exactly what prewarming buys (§6.1)
                     startups.append(prof.cold_start_s * 0.15)
-                    colds.append(True)
+                    colds.append(False)
                 else:
                     startups.append(0.0)
                     colds.append(False)
@@ -473,12 +534,15 @@ class TargetPlatform:
 
     # ------------------------------------------------ faas-idler / warm ---
     def _schedule_idler(self):
-        if self._idler_scheduled or self.prof.scale_to_zero_s <= 0:
+        if self._idler_scheduled or self.prof.scale_to_zero_s <= 0 or \
+                self.managed_keepalive:
             return
         self._idler_scheduled = True
 
         def idle_check():
             self._idler_scheduled = False
+            if self.managed_keepalive:   # controller attached mid-run
+                return
             now = self.clock.now()
             for fn, rs in list(self.replicas.items()):
                 spec = self.deployed.get(fn)
@@ -489,6 +553,7 @@ class TargetPlatform:
                         keep.append(r)
                     else:
                         r.retired = True
+                        self._idle_sub(fn, r.state)
                         if spec is not None:
                             self._mem_replicas_mb -= spec.memory_mb
                 self.replicas[fn] = keep
@@ -499,14 +564,89 @@ class TargetPlatform:
         self.clock.after(self.prof.scale_to_zero_s, idle_check)
 
     def prewarm(self, fn_name: str, n: int):
-        """Predictive prewarming from the EventModel forecast (§3.3 (1))."""
+        """Warm-pool grow transition: start ``n`` prewarmed containers
+        (predictive prewarming, §3.3 (1) / repro.autoscale)."""
+        if n <= 0 or self.failed:
+            return
         spec = self.deployed.get(fn_name)
+        if spec is None:                 # undeployed (or destroyed mid-run)
+            return
+        now = self.clock.now()
         for _ in range(n):
             rep = Replica(fn_name, PREWARM)
+            rep.last_used = now          # keep-alive TTL runs from creation
             self.replicas[fn_name].append(rep)
-            if spec is not None:
-                self._mem_replicas_mb += spec.memory_mb
+            self._mem_replicas_mb += spec.memory_mb
             self._push_free(rep)
+        self._touch_energy()
+
+    def retire(self, fn_name: str, n: int) -> int:
+        """Warm-pool shrink transition: retire up to ``n`` idle replicas of
+        ``fn_name``, coldest-first (COLD, then PREWARM, then WARM), and
+        release their memory from the O(1) running total.  Returns the
+        number actually retired (busy replicas are never touched)."""
+        pools = self._free.get(fn_name)
+        retired = 0
+        if pools is not None and n > 0:
+            spec = self.deployed.get(fn_name)
+            for state in (COLD, PREWARM, WARM):
+                lst = pools[state]
+                while lst and retired < n:
+                    r = lst.pop()
+                    if r.retired or r.busy or r.state != state:
+                        continue
+                    r.retired = True
+                    self._idle_sub(fn_name, state)
+                    if spec is not None:
+                        self._mem_replicas_mb -= spec.memory_mb
+                    retired += 1
+                if retired >= n:
+                    break
+            if retired:
+                live = [r for r in self.replicas[fn_name] if not r.retired]
+                self.replicas[fn_name] = live
+                self._touch_energy()
+        return retired
+
+    def enforce_keepalive(self, fn_name: str, ttl_s: float,
+                          keep: int = 0) -> Tuple[int, float]:
+        """TTL sweep for one function's warm pool: retire idle replicas
+        unused for at least ``ttl_s`` seconds, preserving the ``keep``
+        youngest-idle ones (the controller's desired pool floor).
+
+        Returns ``(retired, next_due)`` where ``next_due`` is the earliest
+        sim-time any of the *surviving* idle replicas could expire (+inf
+        when none are idle) — the controller uses it to skip sweeps that
+        cannot retire anything."""
+        now = self.clock.now()
+        n_idle = self.idle_warm(fn_name)
+        if n_idle <= keep:
+            # nothing retirable *at this desired level*; if the desired
+            # floor drops later, re-check after a TTL (bounded staleness)
+            # — a pool that empties bumps idle_gen and re-arms the sweep
+            return 0, (now + ttl_s if n_idle else float("inf"))
+        spec = self.deployed.get(fn_name)
+        idle = [r for r in self.replicas[fn_name]
+                if not r.busy and not r.retired]
+        idle.sort(key=lambda r: r.last_used)      # oldest-idle first
+        surplus = len(idle) - keep
+        retired = 0
+        for r in idle[:surplus]:
+            if now - r.last_used < ttl_s:
+                break
+            r.retired = True
+            self._idle_sub(fn_name, r.state)
+            if spec is not None:
+                self._mem_replicas_mb -= spec.memory_mb
+            retired += 1
+        if retired:
+            live = [r for r in self.replicas[fn_name] if not r.retired]
+            self.replicas[fn_name] = live
+            self._touch_energy()
+        survivors = idle[retired:]
+        next_due = survivors[0].last_used + ttl_s if survivors \
+            else float("inf")
+        return retired, next_due
 
     # ------------------------------------------------------------ faults --
     def fail(self):
@@ -528,3 +668,6 @@ class TargetPlatform:
         self._free.clear()
         self._busy = 0
         self._mem_replicas_mb = 0.0
+        self._idle_counts.clear()
+        self._idle_total = 0
+        self.idle_gen += 1

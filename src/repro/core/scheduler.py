@@ -109,7 +109,8 @@ class FnView:
     """Per-function columns over a snapshot's platforms (one row of the
     decision problem, broadcast to every invocation of that function)."""
 
-    __slots__ = ("fn", "alive", "exec_s", "p90_s", "energy_j", "data_s")
+    __slots__ = ("fn", "alive", "exec_s", "p90_s", "energy_j", "data_s",
+                 "warm_free")
 
     def __init__(self, fn: FunctionSpec):
         self.fn = fn
@@ -118,6 +119,7 @@ class FnView:
         self.p90_s: Optional[np.ndarray] = None
         self.energy_j: Optional[np.ndarray] = None
         self.data_s: Optional[np.ndarray] = None
+        self.warm_free: Optional[np.ndarray] = None
 
 
 class PlatformSnapshot:
@@ -131,7 +133,8 @@ class PlatformSnapshot:
     """
 
     __slots__ = ("platforms", "profs", "names", "n", "failed",
-                 "total_memory_mb", "cpu_util", "mem_util", "_fn_cache")
+                 "total_memory_mb", "cpu_util", "mem_util", "cold_start_s",
+                 "_warm_total", "_fn_cache")
 
     def __init__(self, platforms: Sequence[TargetPlatform]):
         self.platforms = list(platforms)
@@ -146,7 +149,21 @@ class PlatformSnapshot:
                                   for p in self.platforms])
         self.mem_util = np.array([self._util(p, "mem_util")
                                   for p in self.platforms])
+        # warm-pool columns (repro.autoscale): per-platform cold-start
+        # seconds and total idle warm replicas, so policies can prefer
+        # platforms with warm capacity standing by (the total is lazy —
+        # no current policy consumes it on the admission hot path)
+        self.cold_start_s = np.array([float(pr.cold_start_s)
+                                      for pr in self.profs])
+        self._warm_total: Optional[np.ndarray] = None
         self._fn_cache: Dict[tuple, FnView] = {}
+
+    @property
+    def warm_total(self) -> np.ndarray:
+        if self._warm_total is None:
+            self._warm_total = np.array(
+                [float(p.idle_warm_total()) for p in self.platforms])
+        return self._warm_total
 
     @staticmethod
     def _util(p, attr: str) -> float:
@@ -176,6 +193,8 @@ class PlatformSnapshot:
                          for o in fn.data_objects) for name in self.names])
             else:
                 v.data_s = np.zeros(self.n)
+            v.warm_free = np.array(
+                [float(p.idle_warm(fn.name)) for p in self.platforms])
             self._fn_cache[key] = v
         if perf is not None:
             if v.exec_s is None:
@@ -200,7 +219,8 @@ class PlatformSnapshot:
                  for fn in fns]
         if len(views) == 1:                  # scalar choose: views, no copy
             v = views[0]
-            out = {"alive": v.alive[None], "data_s": v.data_s[None]}
+            out = {"alive": v.alive[None], "data_s": v.data_s[None],
+                   "warm_free": v.warm_free[None]}
             if perf is not None:
                 out["exec_s"] = v.exec_s[None]
                 if p90:
@@ -209,7 +229,8 @@ class PlatformSnapshot:
                     out["energy_j"] = v.energy_j[None]
             return out
         out = {"alive": np.stack([v.alive for v in views]),
-               "data_s": np.stack([v.data_s for v in views])}
+               "data_s": np.stack([v.data_s for v in views]),
+               "warm_free": np.stack([v.warm_free for v in views])}
         if perf is not None:
             out["exec_s"] = np.stack([v.exec_s for v in views])
             if p90:
@@ -483,6 +504,33 @@ class DataLocalityPolicy(Policy):
         return ps.locality_decide(m["exec_s"], m["data_s"], m["alive"])
 
 
+class WarmAwarePolicy(Policy):
+    """Cold-start-aware routing over the snapshot's warm-pool columns
+    (repro.autoscale): locality-adjusted latency plus the platform's full
+    cold-start penalty whenever the function has no idle warm replica
+    standing by — so traffic prefers platforms whose warm pools (TTL'd or
+    predictively prewarmed) already hold capacity for it."""
+
+    name = "warm_aware"
+
+    def __init__(self, perf: FunctionPerformanceModel,
+                 placement: Optional[DataPlacementManager] = None):
+        self.perf = perf
+        self.placement = placement
+
+    def fn_cost_matrix(self, fns, snap):
+        m = snap.fn_matrix(fns, self.perf, self.placement)
+        cold = np.where(m["warm_free"] > 0.0, 0.0,
+                        snap.cold_start_s[None, :])
+        return _masked(m["exec_s"] + m["data_s"] + cold, m["alive"])
+
+    def _jax_decide(self, fns, snap):
+        ps = _policy_score_mod()
+        m = snap.fn_matrix(fns, self.perf, self.placement)
+        return ps.warm_decide(m["exec_s"], m["data_s"], m["warm_free"],
+                              snap.cold_start_s, m["alive"])
+
+
 def _slo_vector(fns: Sequence[FunctionSpec]) -> np.ndarray:
     return np.array([fn.slo.p90_response_s for fn in fns])
 
@@ -562,4 +610,5 @@ class SLOCompositePolicy(Policy):
 POLICIES = {cls.name: cls for cls in
             (PerformanceRankedPolicy, UtilizationAwarePolicy,
              RoundRobinCollaboration, WeightedCollaboration,
-             DataLocalityPolicy, EnergyAwarePolicy, SLOCompositePolicy)}
+             DataLocalityPolicy, WarmAwarePolicy, EnergyAwarePolicy,
+             SLOCompositePolicy)}

@@ -12,6 +12,31 @@ import itertools
 from typing import Callable, List, Optional, Tuple
 
 
+class TimerHandle:
+    """Cancellation token for a scheduled callback.
+
+    ``cancel`` drops the callback reference immediately (the closure and
+    everything it captures become collectable right away); the heap entry
+    itself is skipped silently when its time comes.  Cancelled timers are
+    therefore "dropped", not "fired as no-ops"."""
+
+    __slots__ = ("fn",)
+
+    def __init__(self, fn: Callable[[], None]):
+        self.fn: Optional[Callable[[], None]] = fn
+
+    def cancel(self) -> None:
+        self.fn = None
+
+    @property
+    def cancelled(self) -> bool:
+        return self.fn is None
+
+    def __call__(self) -> None:
+        if self.fn is not None:
+            self.fn()
+
+
 class SimClock:
     def __init__(self):
         self._t = 0.0
@@ -25,8 +50,20 @@ class SimClock:
         assert t >= self._t - 1e-9, (t, self._t)
         heapq.heappush(self._q, (t, next(self._seq), fn))
 
+    def schedule_cancellable(self, t: float,
+                             fn: Callable[[], None]) -> TimerHandle:
+        """Like ``schedule`` but returns a handle whose ``cancel`` drops
+        the callback (hedge group timers whose members all completed)."""
+        handle = TimerHandle(fn)
+        self.schedule(t, handle)
+        return handle
+
     def after(self, dt: float, fn: Callable[[], None]) -> None:
         self.schedule(self._t + max(dt, 0.0), fn)
+
+    def after_cancellable(self, dt: float,
+                          fn: Callable[[], None]) -> TimerHandle:
+        return self.schedule_cancellable(self._t + max(dt, 0.0), fn)
 
     def schedule_many(self, times, fns) -> None:
         """Bulk-schedule parallel sequences of times and callbacks (one

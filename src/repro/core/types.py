@@ -114,6 +114,11 @@ class PlatformProfile:
     # power model: P = idle + (loaded - idle) * utilization  (per node)
     idle_w_per_node: float = 5.0
     loaded_w_per_node: float = 20.0
+    # keep-alive watts per *idle* warm replica (container resident in
+    # memory): the energy price of avoiding cold starts.  0 keeps the
+    # historical accounting (idle pools are free) for platforms that do
+    # not opt in; the autoscale scenarios set it explicitly.
+    warm_w_per_replica: float = 0.0
     # FaaS semantics
     overhead_s: float = 0.05          # gateway/controller/watchdog per req
     cold_start_s: float = 2.0

@@ -14,7 +14,8 @@ hand-wired benchmarks could not express.
 """
 from repro.inspector.scenario import (SCHEMA_VERSION, FaultEvent, Scenario,
                                       ScenarioReport, Workload, assemble,
-                                      build_report, run_scenario)
+                                      build_report, run_scenario,
+                                      run_scenario_state)
 from repro.inspector.traces import (WorkloadMix, build_arrivals,
                                     counts_to_arrivals, diurnal_arrivals,
                                     load_azure_invocations_csv,
@@ -25,6 +26,7 @@ from repro.inspector import registry
 __all__ = [
     "SCHEMA_VERSION", "FaultEvent", "Scenario", "ScenarioReport",
     "Workload", "assemble", "build_report", "run_scenario",
+    "run_scenario_state",
     "WorkloadMix", "build_arrivals", "counts_to_arrivals",
     "diurnal_arrivals", "load_azure_invocations_csv", "mmpp_arrivals",
     "ramp_arrivals", "synthetic_azure_counts", "registry",

@@ -87,6 +87,36 @@ def fig10_scenario(mode: str, duration_s: float = 120.0,
     raise KeyError(f"unknown fig10 mode {mode!r}")
 
 
+def fig6_cell(platform: str, duration_s: float = 120.0,
+              analytic: bool = False) -> Scenario:
+    """Fig. 6: nodeinfo at 20 VUs, exclusive on one platform — the Table-1
+    metric-detail run (same drive as ``fig5_cell`` at 20 VUs; the fig6
+    benchmark reads the metric *series* behind the report via
+    ``run_scenario_state``)."""
+    return Scenario(
+        name=f"fig6/nodeinfo/{platform}/vus20",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("nodeinfo", mode="closed", vus=20,
+                            sleep_s=0.05),),
+        duration_s=duration_s, platform_override=platform,
+        analytic=analytic)
+
+
+def fig8_cell(bg_cpu: float, duration_s: float = 120.0,
+              analytic: bool = False) -> Scenario:
+    """Fig. 8: image-processing at 40 VUs on old-hpc with background CPU
+    load in {0%, 50%, 100%} (the §5.1.2 interference knob)."""
+    platform = "old-hpc-node-cluster"
+    return Scenario(
+        name=f"fig8/image-processing/bg_cpu{int(bg_cpu * 100)}",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("image-processing", mode="closed", vus=40,
+                            sleep_s=0.5),),
+        duration_s=duration_s, platform_override=platform,
+        data_location=platform, bg_cpu={platform: bg_cpu},
+        analytic=analytic)
+
+
 def table4_cell(platform: str, duration_s: float = 600.0, rps: float = 40.0,
                 analytic: bool = False) -> Scenario:
     """Table 4: JSON-loads at a fixed open-loop arrival rate, exclusive on
@@ -329,6 +359,60 @@ def split_vs_colocate(wan_bw: float = 2e9, duration_s: float = 120.0,
                      arrival={"kind": "poisson", "rps": rps}),
         ),
         duration_s=duration_s)
+
+
+# ---------------------------------------------------------------------------
+# Prewarm-policy studies (warm-pool lifecycle, repro.autoscale)
+# ---------------------------------------------------------------------------
+
+AUTOSCALE_PLATFORM = "cloud-cluster"
+KEEPALIVE_W = 2.0                      # watts per idle warm replica
+
+# one deep diurnal cycle every 600 s: the trough (rate -> 0) is where a
+# fixed keep-alive must choose between dying (cold starts at the ramp)
+# and idling (watts); ~6000 invocations over two cycles
+DIURNAL_TRACE = {"kind": "diurnal", "mean_rps": 5.0, "period_s": 600.0,
+                 "peak_frac": 1.0}
+# sparse: one arrival every ~12 s — keep-alive is almost pure idle cost
+SPARSE_TRACE = {"kind": "poisson", "rps": 0.08}
+# MMPP burst storm: quiet baseline punctuated by short bursts, the
+# recurrence-gap case the predictive TTL histogram is built to learn
+BURST_TRACE = {"kind": "mmpp", "base_rps": 0.5, "burst_rps": 40.0,
+               "mean_quiet_s": 45.0, "mean_burst_s": 3.0}
+
+AUTOSCALE_POLICIES = {
+    "ttl": {"policy": "ttl", "policy_kwargs": {"ttl_s": 60.0}},
+    "ttl-short": {"policy": "ttl", "policy_kwargs": {"ttl_s": 15.0}},
+    "scale-to-zero": {"policy": "scale_to_zero",
+                      "policy_kwargs": {"idle_s": 2.0}},
+    "concurrency": {"policy": "concurrency"},
+    "predictive": {"policy": "predictive"},
+}
+
+
+def autoscale_cell(trace_name: str, policy_key: str,
+                   duration_s: float) -> Scenario:
+    """One arm of a prewarm-policy A/B: a single exclusive platform (so
+    cold-start and idle-Wh effects are not confounded by routing), one
+    trace, one keep-alive policy, idle keep-alive watts charged."""
+    traces_by_name = {"diurnal": DIURNAL_TRACE, "sparse": SPARSE_TRACE,
+                      "burst": BURST_TRACE}
+    return Scenario(
+        name=f"autoscale/{trace_name}-{policy_key}",
+        platforms=(AUTOSCALE_PLATFORM,),
+        platform_override=AUTOSCALE_PLATFORM,
+        workloads=(Workload("nodeinfo",
+                            arrival=dict(traces_by_name[trace_name])),),
+        duration_s=duration_s, drain_s=30.0,
+        keepalive_w_per_replica=KEEPALIVE_W,
+        autoscale=dict(AUTOSCALE_POLICIES[policy_key]))
+
+
+for _trace, _dur in (("diurnal", 1200.0), ("sparse", 600.0),
+                     ("burst", 600.0)):
+    for _pol in AUTOSCALE_POLICIES:
+        register(f"autoscale/{_trace}-{_pol}",
+                 lambda t=_trace, p=_pol, d=_dur: autoscale_cell(t, p, d))
 
 
 register("chains/etl-pipeline", chain_etl)

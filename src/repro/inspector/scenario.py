@@ -36,6 +36,7 @@ from repro.core.scheduler import (DataLocalityPolicy, EnergyAwarePolicy,
                                   RoundRobinCollaboration,
                                   SLOCompositePolicy,
                                   UtilizationAwarePolicy,
+                                  WarmAwarePolicy,
                                   WeightedCollaboration)
 from repro.core.types import SLO, DeploymentSpec, Invocation
 from repro.chains import catalog as chain_catalog
@@ -121,6 +122,16 @@ class Scenario:
     retain_objects: bool = False             # keep per-invocation lists
     enable_hedging: bool = False
     predictive_prewarm: bool = False
+    # warm-pool lifecycle (repro.autoscale): {"policy": "ttl" |
+    # "scale_to_zero" | "concurrency" | "predictive", "tick_s": ...,
+    # "backend": ..., "policy_kwargs": {...}}; None leaves platforms on
+    # their own faas-idler
+    autoscale: Optional[Dict[str, Any]] = None
+    # keep-alive watts charged per idle warm replica (0 keeps the
+    # historical accounting; the prewarm-policy studies set it)
+    keepalive_w_per_replica: float = 0.0
+    # background CPU load per platform (§5.1.2 interference knob)
+    bg_cpu: Dict[str, float] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -141,6 +152,8 @@ def _make_policy(name: str, kwargs: Dict[str, Any], cp: FDNControlPlane):
         return WeightedCollaboration(kw.get("weights", {}))
     if name == "data_locality":
         return DataLocalityPolicy(cp.perf, cp.placement)
+    if name == "warm_aware":
+        return WarmAwarePolicy(cp.perf, cp.placement)
     if name == "energy_aware":
         return EnergyAwarePolicy(cp.perf)
     if name == "slo_composite":
@@ -165,7 +178,13 @@ def assemble(sc: Scenario):
     cp.kb.log_decisions = sc.retain_objects
     cp.policy = _make_policy(sc.policy, sc.policy_kwargs, cp)
     for name in sc.platforms:
-        cp.create_platform(PLATFORM_CATALOG[name])
+        prof = PLATFORM_CATALOG[name]
+        if sc.keepalive_w_per_replica > 0.0:
+            prof = dataclasses.replace(
+                prof, warm_w_per_replica=sc.keepalive_w_per_replica)
+        cp.create_platform(prof)
+    for name, bg in sc.bg_cpu.items():
+        cp.platforms[name].bg_cpu = float(bg)
     fns = fn_mod.paper_functions(IMAGE_KEY, JSON_KEY)
     if sc.analytic:
         fns = {k: f.replace(real_fn=None) for k, f in fns.items()}
@@ -196,6 +215,15 @@ def assemble(sc: Scenario):
         cp.placement.set_bandwidth(a, b, float(bw))
     cp.deploy(DeploymentSpec(sc.name, list(fns.values()),
                              list(sc.platforms)))
+    if sc.autoscale is not None:
+        kw = dict(sc.autoscale)
+        cp.attach_autoscaler(
+            policy=kw.pop("policy", "predictive"),
+            tick_s=float(kw.pop("tick_s", 1.0)),
+            backend=kw.pop("backend", None),
+            policy_kwargs=kw.pop("policy_kwargs", None))
+        if kw:
+            raise ValueError(f"unknown autoscale keys: {sorted(kw)}")
     attach_completion_hooks(cp)
     gw = Gateway(cp)
     if sc.lb_policy is not None:
@@ -231,6 +259,8 @@ class ScenarioReport:
                           separators=(",", ":"))
 
     REQUIRED_TOTALS = ("submitted", "completed", "rejected", "cold_starts",
+                       "cold_start_rate", "idle_wh",
+                       "idle_wh_per_completion",
                        "slo_violations", "slo_violation_rate", "decisions",
                        "decisions_per_sim_s", "sim_duration_s",
                        "energy_wh")
@@ -280,6 +310,13 @@ def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 def run_scenario(sc: Scenario) -> ScenarioReport:
+    return run_scenario_state(sc)[0]
+
+
+def run_scenario_state(sc: Scenario):
+    """``run_scenario`` returning ``(report, control_plane, sink)`` — for
+    callers (fig6/fig8 benchmarks, tests) that need the metric series or
+    platform state behind the report, not just the canonical summary."""
     cp, gw, fns, sink = assemble(sc)
     clock = cp.clock
 
@@ -359,9 +396,10 @@ def run_scenario(sc: Scenario) -> ScenarioReport:
         cp.metrics.defer_completions = False
         cp.metrics.record_completions(sink, visible_infra=visible)
 
-    return build_report(sc, cp, fns, sink,
-                        closed_submitted=len(closed_out),
-                        chain_exec=chain_exec)
+    report = build_report(sc, cp, fns, sink,
+                          closed_submitted=len(closed_out),
+                          chain_exec=chain_exec)
+    return report, cp, sink
 
 
 def build_report(sc: Scenario, cp: FDNControlPlane, fns,
@@ -386,18 +424,28 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         mask = (plat_col == pid) if pid is not None else \
             np.zeros(rt.size, bool)
         stats = _pct_stats(rt[mask], sc.duration_s)
-        stats["cold_starts"] = int(cold[mask].sum())
+        n_cold = int(cold[mask].sum())
+        n_done = int(mask.sum())
+        stats["cold_starts"] = n_cold
+        stats["cold_start_rate"] = n_cold / n_done if n_done else 0.0
         stats["slo_violations"] = int(violated[mask].sum())
         joules = cp.energy.joules(pname)
+        idle_j = cp.energy.keepalive_joules(pname)
         stats["energy_j"] = float(joules)
         stats["energy_wh"] = float(joules) / 3600.0
+        stats["idle_wh"] = float(idle_j) / 3600.0
+        stats["idle_wh_per_completion"] = \
+            float(idle_j) / 3600.0 / n_done if n_done else 0.0
         per_platform[pname] = stats
 
     per_function: Dict[str, Dict[str, Any]] = {}
     for fname, fid in cols["fn_ids"].items():
         mask = fn_col == fid
         stats = _pct_stats(rt[mask], sc.duration_s)
-        stats["cold_starts"] = int(cold[mask].sum())
+        n_cold = int(cold[mask].sum())
+        stats["cold_starts"] = n_cold
+        stats["cold_start_rate"] = (n_cold / int(mask.sum())
+                                    if mask.any() else 0.0)
         n_violated = int(violated[mask].sum())
         stats["slo_violations"] = n_violated
         stats["slo_violation_rate"] = (n_violated / int(mask.sum())
@@ -409,11 +457,14 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
     rejected = cp.rejected_count
     n_violations = int(violated.sum()) + rejected
     decisions = cp.kb.decision_count
+    idle_wh = float(sum(p["idle_wh"] for p in per_platform.values()))
     totals = {
         "submitted": submitted,
         "completed": sink.completed,
         "rejected": rejected,
         "cold_starts": int(cold.sum()),
+        "cold_start_rate": (int(cold.sum()) / sink.completed
+                            if sink.completed else 0.0),
         "slo_violations": n_violations,
         "slo_violation_rate": n_violations / max(submitted, 1),
         "decisions": decisions,
@@ -421,10 +472,20 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         "sim_duration_s": float(sc.duration_s),
         "energy_wh": float(sum(p["energy_wh"]
                                for p in per_platform.values())),
+        "idle_wh": idle_wh,
+        "idle_wh_per_completion": (idle_wh / sink.completed
+                                   if sink.completed else 0.0),
         "redelivered": cp.redeliverer.redelivered,
         "hedges_sent": cp.hedge.hedges_sent,
     }
     totals.update(_pct_stats(rt, sc.duration_s))
+    if cp.autoscaler is not None:
+        totals["autoscale"] = {
+            "policy": cp.autoscaler.policy.name,
+            "ticks": cp.autoscaler.ticks,
+            "prewarmed": cp.autoscaler.prewarmed,
+            "retired": cp.autoscaler.retired,
+        }
 
     per_chain: Dict[str, Dict[str, Any]] = {}
     if chain_exec is not None:

@@ -103,6 +103,15 @@ def locality_decide(exec_s, data_s, alive):
 
 
 @jax.jit
+def warm_decide(exec_s, data_s, warm_free, cold_start_s, alive):
+    """Warm-pool-aware routing (repro.autoscale): execution + data-access
+    seconds, plus the platform's cold-start penalty where the function has
+    no idle warm replica standing by."""
+    cold = jnp.where(warm_free > 0.0, 0.0, cold_start_s[None, :])
+    return _masked_argmin(exec_s + data_s + cold, alive)
+
+
+@jax.jit
 def energy_decide(energy_j, p90_s, slo_s, alive):
     """§5.2: cheapest energy among SLO-feasible (degrade to alive)."""
     feasible = _degrade(alive & (p90_s <= slo_s[:, None]), alive)

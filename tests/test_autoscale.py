@@ -1,0 +1,449 @@
+"""Predictive autoscaling subsystem (repro.autoscale): warm-pool
+lifecycle transitions on the platform, keep-alive policies, forecaster
+backend parity (byte-identical prewarm decisions), controller
+determinism, cold-start-rate accounting, and the warm-pool scheduler
+columns."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.autoscale import (ConcurrencyTargetPolicy, FixedTTLPolicy,
+                             PredictivePolicy, ScaleToZeroPolicy,
+                             WarmPoolController, make_policy)
+from repro.core import FDNControlPlane, WarmAwarePolicy
+from repro.core import profiles as prof_mod
+from repro.core.faults import HedgePolicy
+from repro.core.platform import PREWARM, WARM
+from repro.core.scheduler import PlatformSnapshot
+from repro.core.simulator import SimClock
+from repro.core.types import DeploymentSpec, FunctionSpec, Invocation
+from repro.inspector import Scenario, Workload, registry, run_scenario
+from repro.inspector.scenario import run_scenario_state
+
+NODEINFO = FunctionSpec(name="nodeinfo", flops=1e6, memory_mb=128)
+HEAVY = FunctionSpec(name="heavy", flops=1e9, memory_mb=512)
+
+
+def make_platform(cp=None, name="cloud-cluster"):
+    cp = cp or FDNControlPlane()
+    p = cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
+    cp.deploy(DeploymentSpec("t", [NODEINFO, HEAVY], [name]))
+    return cp, p
+
+
+def live_replicas(p, fn):
+    return [r for r in p.replicas[fn] if not r.retired]
+
+
+def mem_brute_force(p):
+    total = 0.0
+    for fn, rs in p.replicas.items():
+        spec = p.deployed.get(fn)
+        if spec is not None:
+            total += sum(spec.memory_mb for r in rs if not r.retired)
+    return total
+
+
+# ---------------------------------------------------- pool transitions ---
+
+def test_prewarm_and_retire_update_o1_accounting():
+    cp, p = make_platform()
+    base_mem = p._mem_replicas_mb
+    assert base_mem == mem_brute_force(p)
+    p.prewarm("nodeinfo", 3)
+    assert p.idle_warm("nodeinfo") == 3 + p.prof.prewarm_pool
+    assert p._mem_replicas_mb == mem_brute_force(p)
+    retired = p.retire("nodeinfo", 2)
+    assert retired == 2
+    assert p.idle_warm("nodeinfo") == 1 + p.prof.prewarm_pool
+    assert p._mem_replicas_mb == mem_brute_force(p)
+    # retiring more than exist retires only what is idle
+    retired = p.retire("nodeinfo", 99)
+    assert retired == 1 + p.prof.prewarm_pool
+    assert p.idle_warm("nodeinfo") == 0
+    assert p._mem_replicas_mb == mem_brute_force(p) == base_mem - \
+        p.prof.prewarm_pool * NODEINFO.memory_mb
+
+
+def test_idle_counts_track_replica_lifecycle():
+    cp, p = make_platform()
+    inv = Invocation(NODEINFO, 0.0)
+    p.invoke(inv)
+    # the prewarm-pool replica was consumed by the start
+    assert p.idle_warm("nodeinfo") == p.prof.prewarm_pool - 1
+    cp.clock.run_until(10.0)
+    assert inv.status == "done"
+    # finished replica returns to the idle pool as WARM
+    counts = p._idle_counts["nodeinfo"]
+    assert counts[WARM] == 1
+    assert p.idle_warm("nodeinfo") == p.prof.prewarm_pool
+    assert p._mem_replicas_mb == mem_brute_force(p)
+
+
+def test_prewarmed_start_is_not_a_cold_start():
+    cp, p = make_platform()
+    a = Invocation(NODEINFO, 0.0)
+    p.invoke(a)                      # consumes the PREWARM pool replica
+    cp.clock.run_until(5.0)
+    assert a.status == "done" and a.cold_start is False
+    b = Invocation(HEAVY, cp.clock.now())
+    p.invoke(b)                      # heavy's prewarm replica
+    c = Invocation(HEAVY, cp.clock.now())
+    p.invoke(c)                      # no free replica left -> cold
+    cp.clock.run_until(50.0)
+    assert b.cold_start is False
+    assert c.cold_start is True
+
+
+def test_enforce_keepalive_ttl_and_floor():
+    cp, p = make_platform()
+    p.prewarm("nodeinfo", 4)
+    n_idle = p.idle_warm("nodeinfo")
+    cp.clock.run_until(10.0)
+    # nothing expired yet at ttl=60
+    retired, due = p.enforce_keepalive("nodeinfo", 60.0, keep=0)
+    assert retired == 0 and due == pytest.approx(60.0)
+    cp.clock.run_until(61.0)
+    retired, due = p.enforce_keepalive("nodeinfo", 60.0, keep=2)
+    assert retired == n_idle - 2
+    assert p.idle_warm("nodeinfo") == 2
+    assert p._mem_replicas_mb == mem_brute_force(p)
+    # the floor protects the youngest two even though they are expired
+    retired, due = p.enforce_keepalive("nodeinfo", 60.0, keep=2)
+    assert retired == 0 and due == pytest.approx(cp.clock.now() + 60.0)
+
+
+def test_retire_never_touches_busy_replicas():
+    cp, p = make_platform()
+    invs = [Invocation(NODEINFO, 0.0) for _ in range(3)]
+    p.invoke_batch(invs)
+    busy_before = p.busy_replicas()
+    assert busy_before == 3
+    p.retire("nodeinfo", 99)
+    assert p.busy_replicas() == busy_before
+    cp.clock.run_until(20.0)
+    assert all(i.status == "done" for i in invs)
+
+
+# ------------------------------------------------------------ policies ---
+
+def test_make_policy_kinds():
+    assert isinstance(make_policy("ttl", ttl_s=10.0), FixedTTLPolicy)
+    assert isinstance(make_policy("scale_to_zero"), ScaleToZeroPolicy)
+    assert isinstance(make_policy("concurrency"), ConcurrencyTargetPolicy)
+    assert isinstance(make_policy("predictive"), PredictivePolicy)
+    with pytest.raises(KeyError):
+        make_policy("nope")
+
+
+def test_fixed_ttl_policy_never_prewarms():
+    pol = FixedTTLPolicy(ttl_s=12.0)
+    pol.resize(4)
+    desired, ttl = pol.tick(np.array([5.0, 0.0, 3.0, 0.0]), True)
+    assert desired.tolist() == [0.0] * 4
+    assert ttl.tolist() == [12.0] * 4
+
+
+def test_predictive_policy_scales_with_forecast():
+    pol = PredictivePolicy()
+    pol.resize(2)
+    pol.set_exec(np.array([0.5, 0.5]), 1.0)
+    for _ in range(30):                     # steady 8/tick on row 0 only
+        desired, ttl = pol.tick(np.array([8.0, 0.0]), True)
+    assert desired[0] >= 4                  # ~8 rps * 0.5 s * headroom
+    assert desired[1] == 0.0
+    # rate collapses -> the forecast decays -> pool target follows
+    for _ in range(60):
+        desired, ttl = pol.tick(np.array([0.0, 0.0]), False)
+    desired, ttl = pol.tick(np.array([1.0, 0.0]), True)   # catch-up tick
+    assert desired[0] <= 2
+
+
+def test_forecaster_backend_parity_byte_identical():
+    """NumPy and jax forecaster backends must produce byte-identical
+    prewarm decisions (desired pools, TTLs) on a seeded arrival stream."""
+    pytest.importorskip("jax")
+    rng = np.random.default_rng(3)
+    rows, ticks = 9, 300
+    bursts = rng.poisson(3.0, size=(ticks, rows)) * \
+        (rng.random(size=(ticks, rows)) < 0.25)
+    exec_s = rng.uniform(0.02, 0.8, rows)
+    out = {}
+    for backend in ("numpy", "jax"):
+        pol = PredictivePolicy(backend=backend)
+        pol.resize(rows)
+        pol.set_exec(exec_s, 1.0)
+        trace = []
+        for k in range(ticks):
+            counts = bursts[k].astype(float)
+            desired, ttl = pol.tick(counts, bool(counts.any()))
+            trace.append((desired.astype(int).tolist(),
+                          np.asarray(ttl).astype(int).tolist()))
+        out[backend] = trace
+    assert out["numpy"] == out["jax"]
+
+
+# ---------------------------------------------------------- controller ---
+
+def autoscale_scenario(pol, **kw):
+    base = dict(
+        name="test/autoscale",
+        platforms=("cloud-cluster",),
+        platform_override="cloud-cluster",
+        workloads=(Workload("nodeinfo",
+                            arrival={"kind": "diurnal", "mean_rps": 5.0,
+                                     "period_s": 60.0,
+                                     "peak_frac": 0.9}),),
+        duration_s=120.0, drain_s=20.0,
+        keepalive_w_per_replica=2.0, autoscale=pol)
+    base.update(kw)
+    return Scenario(**base)
+
+
+def test_autoscale_ticks_are_seed_deterministic():
+    sc = autoscale_scenario({"policy": "predictive"})
+    a, b = run_scenario(sc), run_scenario(sc)
+    assert a.to_json() == b.to_json()
+    assert a.totals["autoscale"]["ticks"] > 0
+    c = run_scenario(sc.replace(seed=43))
+    assert a.to_json() != c.to_json()
+
+
+def test_controller_takes_over_keepalive_and_reclaims_memory():
+    sc = autoscale_scenario(
+        {"policy": "scale_to_zero", "policy_kwargs": {"idle_s": 2.0}})
+    rep, cp, _sink = run_scenario_state(sc)
+    p = cp.platforms["cloud-cluster"]
+    assert p.managed_keepalive is True
+    assert rep.totals["autoscale"]["retired"] > 0
+    # scale-to-zero leaves no idle pool at the end of the drain, and the
+    # O(1) memory running total agrees with a brute-force rescan
+    assert p.idle_warm("nodeinfo") == 0
+    assert p._mem_replicas_mb == mem_brute_force(p)
+    assert p.idle_warm_total() == sum(
+        1 for rs in p.replicas.values() for r in rs
+        if not r.retired and not r.busy)
+
+
+def test_predictive_controller_prewarms():
+    rep, cp, _sink = run_scenario_state(
+        autoscale_scenario({"policy": "predictive"}))
+    a = rep.totals["autoscale"]
+    assert a["policy"] == "predictive"
+    assert a["prewarmed"] > 0
+
+
+def test_scale_to_zero_saves_idle_wh_at_worse_p99():
+    sparse = {"kind": "poisson", "rps": 0.08}
+    ttl = run_scenario(autoscale_scenario(
+        {"policy": "ttl", "policy_kwargs": {"ttl_s": 60.0}},
+        workloads=(Workload("nodeinfo", arrival=sparse),),
+        duration_s=400.0)).totals
+    s2z = run_scenario(autoscale_scenario(
+        {"policy": "scale_to_zero", "policy_kwargs": {"idle_s": 2.0}},
+        workloads=(Workload("nodeinfo", arrival=sparse),),
+        duration_s=400.0)).totals
+    assert s2z["idle_wh"] < ttl["idle_wh"]
+    assert s2z["p99_s"] > ttl["p99_s"]
+    assert s2z["cold_start_rate"] > ttl["cold_start_rate"]
+
+
+def test_cold_start_rate_matches_per_invocation_flags():
+    sc = autoscale_scenario(
+        {"policy": "scale_to_zero", "policy_kwargs": {"idle_s": 1.0}},
+        retain_objects=True)
+    rep, cp, sink = run_scenario_state(sc)
+    flags = sum(1 for inv in cp.completed if inv.cold_start)
+    assert rep.totals["cold_starts"] == flags
+    assert rep.totals["cold_start_rate"] == pytest.approx(
+        flags / rep.totals["completed"])
+    per_fn = rep.per_function["nodeinfo"]
+    assert per_fn["cold_start_rate"] == pytest.approx(
+        per_fn["cold_starts"] / per_fn["completed"])
+
+
+def test_idle_wh_accounting_zero_without_keepalive_watts():
+    sc = autoscale_scenario({"policy": "ttl"}, keepalive_w_per_replica=0.0)
+    rep = run_scenario(sc)
+    assert rep.totals["idle_wh"] == 0.0
+    sc = autoscale_scenario({"policy": "ttl"})
+    rep = run_scenario(sc)
+    assert rep.totals["idle_wh"] > 0.0
+    assert rep.totals["idle_wh_per_completion"] == pytest.approx(
+        rep.totals["idle_wh"] / rep.totals["completed"])
+    # keep-alive joules are part of the total energy
+    pp = rep.per_platform["cloud-cluster"]
+    assert pp["energy_wh"] >= pp["idle_wh"]
+
+
+def test_elastic_platform_adopted_mid_run():
+    cp = FDNControlPlane()
+    cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    cp.deploy(DeploymentSpec("t", [NODEINFO], ["cloud-cluster"]))
+    ctl = cp.attach_autoscaler(policy="ttl", start=False)
+    late = cp.create_platform(prof_mod.PAPER_PLATFORMS["edge-cluster"])
+    assert late.managed_keepalive is True
+    assert late.autoscale_counts is not None
+    assert "edge-cluster" in ctl._by_name
+
+
+# ------------------------------------------- warm-pool snapshot columns --
+
+def test_snapshot_warm_columns():
+    cp = FDNControlPlane()
+    a = cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    b = cp.create_platform(prof_mod.PAPER_PLATFORMS["edge-cluster"])
+    fn = NODEINFO.replace(runtime="python3")
+    cp.deploy(DeploymentSpec("t", [fn], ["cloud-cluster", "edge-cluster"]))
+    b.prewarm(fn.name, 3)
+    snap = PlatformSnapshot([a, b])
+    assert snap.warm_total.tolist() == [float(a.idle_warm_total()),
+                                        float(b.idle_warm_total())]
+    view = snap.fn_view(fn)
+    assert view.warm_free.tolist() == [float(a.idle_warm(fn.name)),
+                                       float(b.idle_warm(fn.name))]
+
+
+def test_warm_aware_policy_prefers_warm_capacity():
+    cp = FDNControlPlane()
+    fast = cp.create_platform(prof_mod.PAPER_PLATFORMS["hpc-node-cluster"])
+    slow = cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    fn = NODEINFO
+    cp.deploy(DeploymentSpec("t", [fn], [fast.prof.name, slow.prof.name]))
+    fast.retire(fn.name, 99)               # no warm capacity on fast
+    slow.retire(fn.name, 99)
+    slow.prewarm(fn.name, 1)
+    pol = WarmAwarePolicy(cp.perf, cp.placement)
+    choice = pol.choose(Invocation(fn, 0.0), list(cp.platforms.values()))
+    assert choice is slow                  # cold-start penalty dominates
+    slow.retire(fn.name, 1)
+    fast.prewarm(fn.name, 1)
+    choice = pol.choose(Invocation(fn, 0.0), list(cp.platforms.values()))
+    assert choice is fast
+
+
+def test_warm_aware_policy_registry_and_jax_parity():
+    pytest.importorskip("jax")
+    from repro.core import scheduler as sched
+    cp = FDNControlPlane()
+    for name in ("hpc-node-cluster", "cloud-cluster", "edge-cluster"):
+        cp.create_platform(prof_mod.PAPER_PLATFORMS[name])
+    fns = [NODEINFO, HEAVY]
+    cp.deploy(DeploymentSpec("t", fns, list(cp.platforms)))
+    cp.platforms["cloud-cluster"].prewarm("nodeinfo", 2)
+    pol = WarmAwarePolicy(cp.perf, cp.placement)
+    snap = PlatformSnapshot(list(cp.platforms.values()))
+    try:
+        sched.set_score_backend("numpy")
+        idx_np, ok_np = pol.fn_decisions(fns, snap, n=10_000)
+        sched.set_score_backend("jax")
+        idx_jx, ok_jx = pol.fn_decisions(fns, snap, n=10_000)
+    finally:
+        sched.set_score_backend("auto")
+    assert idx_np.tolist() == idx_jx.tolist()
+    assert ok_np.tolist() == ok_jx.tolist()
+
+
+# ------------------------------------------- hedge-timer cancellation ---
+
+def seeded_perf(cp, fn, platforms, n=12):
+    for pname in platforms:
+        for _ in range(n):
+            inv = Invocation(fn, 0.0)
+            inv.platform = pname
+            inv.exec_time = 0.05
+            inv.end_t = 0.05
+            cp.perf.observe(inv)
+
+
+def test_hedge_group_timer_cancelled_when_all_members_complete():
+    cp = FDNControlPlane()
+    a = cp.create_platform(prof_mod.PAPER_PLATFORMS["hpc-node-cluster"])
+    b = cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    cp.deploy(DeploymentSpec("t", [NODEINFO], [a.prof.name, b.prof.name]))
+    seeded_perf(cp, NODEINFO, [a.prof.name, b.prof.name])
+    hedge = HedgePolicy(cp.clock, cp.perf, enabled=True)
+    sent = []
+    invs = [Invocation(NODEINFO, 0.0) for _ in range(16)]
+    hedge.watch_group(invs, a, [b], lambda dups, p: sent.extend(dups))
+    assert hedge.group_timers_armed == 1
+    assert hedge.live_group_timers() == 1
+    pending_before = cp.clock.pending
+    for inv in invs:                       # all complete before the budget
+        inv.status = "done"
+        hedge.completed(inv)
+    # the timer is dropped, not left to fire as a no-op
+    assert hedge.group_timers_cancelled == 1
+    assert hedge.live_group_timers() == 0
+    assert hedge._groups == {}
+    cp.clock.run_until(60.0)
+    assert sent == [] and hedge.hedges_sent == 0
+    assert cp.clock.pending <= pending_before
+
+
+def test_hedge_group_timer_still_fires_for_stragglers():
+    cp = FDNControlPlane()
+    a = cp.create_platform(prof_mod.PAPER_PLATFORMS["hpc-node-cluster"])
+    b = cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    cp.deploy(DeploymentSpec("t", [NODEINFO], [a.prof.name, b.prof.name]))
+    seeded_perf(cp, NODEINFO, [a.prof.name, b.prof.name])
+    hedge = HedgePolicy(cp.clock, cp.perf, enabled=True)
+    sent = []
+    invs = [Invocation(NODEINFO, 0.0) for _ in range(8)]
+    hedge.watch_group(invs, a, [b], lambda dups, p: sent.extend(dups))
+    for inv in invs[:5]:
+        inv.status = "done"
+        hedge.completed(inv)
+    assert hedge.live_group_timers() == 1   # stragglers keep it armed
+    cp.clock.run_until(60.0)
+    assert len(sent) == 3                   # one duplicate per straggler
+    assert hedge.hedges_sent == 3
+    assert hedge.live_group_timers() == 0
+    assert hedge._groups == {}
+
+
+def test_hedge_timer_count_under_sustained_bursts():
+    """N fully-completed admission groups leave ZERO live timers (the
+    cancellable index drops them); only straggling groups stay armed."""
+    cp = FDNControlPlane()
+    a = cp.create_platform(prof_mod.PAPER_PLATFORMS["hpc-node-cluster"])
+    b = cp.create_platform(prof_mod.PAPER_PLATFORMS["cloud-cluster"])
+    cp.deploy(DeploymentSpec("t", [NODEINFO], [a.prof.name, b.prof.name]))
+    seeded_perf(cp, NODEINFO, [a.prof.name, b.prof.name])
+    hedge = HedgePolicy(cp.clock, cp.perf, enabled=True)
+    groups = []
+    for _ in range(50):
+        invs = [Invocation(NODEINFO, 0.0) for _ in range(4)]
+        hedge.watch_group(invs, a, [b], lambda dups, p: None)
+        groups.append(invs)
+    assert hedge.group_timers_armed == 50
+    for invs in groups[:47]:
+        for inv in invs:
+            inv.status = "done"
+            hedge.completed(inv)
+    assert hedge.group_timers_cancelled == 47
+    assert hedge.live_group_timers() == 3
+    # index holds only the straggling groups' members
+    assert len(hedge._groups) == 3 * 4
+
+
+# ----------------------------------------------------- registry wiring ---
+
+def test_autoscale_registry_scenarios_build_and_validate():
+    names = [n for n in registry.names() if n.startswith("autoscale/")]
+    assert len(names) >= 10
+    sc = registry.get("autoscale/diurnal-predictive")
+    assert sc.autoscale["policy"] == "predictive"
+    assert sc.keepalive_w_per_replica > 0.0
+
+
+def test_report_schema_requires_autoscale_sections():
+    from repro.inspector import ScenarioReport
+    rep = run_scenario(registry.get("smoke/tiny"))
+    d = json.loads(rep.to_json())
+    ScenarioReport.validate(d)
+    bad = dict(d, totals={k: v for k, v in d["totals"].items()
+                          if k != "idle_wh"})
+    with pytest.raises(ValueError):
+        ScenarioReport.validate(bad)
