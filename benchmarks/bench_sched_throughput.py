@@ -21,7 +21,12 @@ paths on the five Table-3 platforms with the production
   * ``jit_hedged`` — the fused admission path under the same config:
     one jitted filter-cascade + argmin decision per distinct function
     (``repro.kernels.policy_score``), bulk KB counters, and ONE
-    vectorized hedge timer per (fn, platform) admission group.
+    vectorized hedge timer per (fn, platform) admission group;
+  * ``columnar`` — ``InvocationBatch`` struct-of-arrays admission:
+    arrivals live as NumPy columns end to end, ``submit_batch`` takes
+    zero-copy chunk views of one preallocated stream, and ``Invocation``
+    objects materialize lazily only when a replica starts a row (the
+    streaming-replay configuration: no KB decision rows).
 
 No simulated time elapses while submitting, so all arms schedule against
 identical platform-state snapshots at t=0 and the measurement isolates
@@ -30,6 +35,8 @@ the admission engine.  Claims checked:
   * ``batched`` sustains >= 10x ``per_invocation`` (>= 3x in --smoke);
   * ``jit_hedged`` sustains >= 3x ``pr1_hedged`` at 5 platforms x 10^4
     invocations (the compiled-admission acceptance pin);
+  * ``columnar`` sustains >= 2x ``batched`` (the array-native-core
+    acceptance pin: the next jump past the PR-4 729k/s floor);
   * jax and NumPy score backends pick identical platforms.
 
 ``--json PATH`` writes the measurements (CI stores it as the
@@ -46,9 +53,12 @@ import sys
 import time
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from benchmarks.fdn_common import Row, build_fdn, check
 from repro.core import scheduler as sched
 from repro.core.faults import HedgePolicy
+from repro.core.invocation_batch import InvocationBatch
 from repro.core.scheduler import SLOCompositePolicy
 from repro.core.types import Invocation
 
@@ -72,6 +82,14 @@ class PR1CompositePolicy(SLOCompositePolicy):
 def _make_invs(fns, n: int) -> List[Invocation]:
     specs = [fns[name] for name in FN_MIX]
     return [Invocation(specs[i % len(specs)], 0.0) for i in range(n)]
+
+
+def _make_stream(fns, n: int) -> InvocationBatch:
+    """The same round-robin mix as ``_make_invs``, born columnar."""
+    specs = [fns[name] for name in FN_MIX]
+    return InvocationBatch(specs,
+                           np.arange(n, dtype=np.int32) % len(specs),
+                           np.zeros(n))
 
 
 def _seed_observations(cp, fns, per_pair: int = 12):
@@ -99,7 +117,12 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         cp.kb.log_decisions = False
         sched.set_score_backend("jax")
         _seed_observations(cp, fns)
-    invs = _make_invs(fns, n)
+    elif kind == "columnar":
+        cp.kb.log_decisions = False
+    if kind == "columnar":
+        stream = _make_stream(fns, n)
+    else:
+        invs = _make_invs(fns, n)
 
     # the previous arm's control plane (queues, timer closures) is garbage
     # by now; collect it OUTSIDE the timed region so each arm pays for its
@@ -113,6 +136,11 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(invs[lo:lo + BATCH])
+    elif kind == "columnar":
+        accepted = 0
+        for lo in range(0, n, BATCH):
+            accepted += cp.submit_batch(stream.view(lo,
+                                                    min(lo + BATCH, n)))
     elif kind == "pr1_hedged":
         accepted = 0
         admit = {name: sc.admit for name, sc in cp.sidecars.items()}
@@ -204,7 +232,8 @@ def run_bench(smoke: bool = False,
     rates: Dict[str, float] = {}
     reps = 2 if smoke else 3                   # best-of: tame CI jitter
     for kind, kn in (("per_invocation", n), ("batched", n),
-                     ("pr1_hedged", hedge_n), ("jit_hedged", hedge_n)):
+                     ("columnar", n), ("pr1_hedged", hedge_n),
+                     ("jit_hedged", hedge_n)):
         dt = float("inf")
         for _ in range(reps):
             rep_dt, acc, kn = _run_arm(kind, kn)
@@ -218,9 +247,11 @@ def run_bench(smoke: bool = False,
 
     speedup = rates["batched"] / max(rates["per_invocation"], 1e-9)
     hedged_speedup = rates["jit_hedged"] / max(rates["pr1_hedged"], 1e-9)
+    columnar_speedup = rates["columnar"] / max(rates["batched"], 1e-9)
     rows.append(Row("sched_throughput/speedups", 0.0,
                     f"batched_vs_per_invocation={speedup:.1f}x;"
                     f"jit_hedged_vs_pr1_hedged={hedged_speedup:.1f}x;"
+                    f"columnar_vs_batched={columnar_speedup:.1f}x;"
                     f"batch={BATCH}"))
 
     target = 3.0 if smoke else 10.0
@@ -230,6 +261,9 @@ def run_bench(smoke: bool = False,
     check(hedged_speedup >= 3.0,
           "fused jit admission (grouped hedging) should be >= 3x the "
           f"PR-1 batched path (got {hedged_speedup:.1f}x)", failures)
+    check(columnar_speedup >= 2.0,
+          "struct-of-arrays admission should be >= 2x the object-list "
+          f"batched path (got {columnar_speedup:.1f}x)", failures)
     _check_backend_parity(failures)
 
     if results_out is not None:
@@ -238,7 +272,9 @@ def run_bench(smoke: bool = False,
             "decisions_per_s": {k: round(v, 1) for k, v in rates.items()},
             "speedups": {"batched_vs_per_invocation": round(speedup, 2),
                          "jit_hedged_vs_pr1_hedged":
-                         round(hedged_speedup, 2)},
+                         round(hedged_speedup, 2),
+                         "columnar_vs_batched":
+                         round(columnar_speedup, 2)},
             "planned_stages_per_s":
             round(_planned_stages_per_s(smoke), 1),
         })

@@ -1,6 +1,13 @@
 """Fig. 11: image-processing at 20 VUs — (1) cloud-cluster with a local
 MinIO, (2) cloud-cluster reading the remote us-east MinIO, (3) executing on
-google-cloud-cluster next to the remote store.
+google-cloud-cluster next to the remote store, (4) migrating the object to
+the compute platform first.
+
+Runs through the FDNInspector scenario runner (``registry.fig11_cell``):
+``Scenario.data_location=REMOTE_STORE`` seeds the object at the remote
+store only (the exclusivity the hand-wired harness faked by deleting
+copies), and ``Scenario.migrate_objects`` expresses the §5.1.4 adaptive
+data-management move declaratively.
 
 Paper claims validated here:
   * local data beats remote data on the same platform (more req/s, lower
@@ -8,57 +15,49 @@ Paper claims validated here:
   * gcf-near-data is nevertheless the WORST option for this compute-ish
     function (compute weakness + cross-region request path dominate);
   * migrating the object to the compute platform recovers the local-access
-    performance (the FDN's adaptive data-management move, §5.1.4).
+    performance.
 """
 from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import (IMAGE_KEY, REMOTE_STORE, Row, build_fdn,
-                                   check, result_row, run_on_platform)
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry
+from repro.inspector.scenario import run_scenario_state
 
 DURATION = 120.0
 
 
-def _run(data_location: str, platform: str, migrate_first: bool = False):
-    cp, gw, fns = build_fdn(data_location=data_location)
-    if data_location != platform and data_location == REMOTE_STORE:
-        # ensure ONLY the remote copy exists for the remote scenarios
-        for name, store in cp.placement.stores.items():
-            if name != REMOTE_STORE and store.has(IMAGE_KEY):
-                del store.objects[IMAGE_KEY]
-    if migrate_first:
-        cp.placement.migrate(IMAGE_KEY, platform)
-    res = run_on_platform(cp, gw, fns["image-processing"], platform, 20,
-                          DURATION, sleep_s=0.2)
-    return cp, res
+def _arm(variant: str):
+    rep, cp, _sink = run_scenario_state(registry.fig11_cell(variant))
+    platform = registry.FIG11_ARMS[variant][0]
+    return rep, cp, rep.per_platform[platform]
 
 
 def run_bench() -> Tuple[List[Row], List[str]]:
     rows: List[Row] = []
     failures: List[str] = []
 
-    _, local = _run("cloud-cluster", "cloud-cluster")
-    rows.append(result_row("fig11/cloud_local_minio", local, DURATION))
+    _, _, local = _arm("cloud-local-minio")
+    rows.append(scenario_row("fig11/cloud_local_minio", local))
 
-    _, remote = _run(REMOTE_STORE, "cloud-cluster")
-    rows.append(result_row("fig11/cloud_remote_minio", remote, DURATION))
+    _, _, remote = _arm("cloud-remote-minio")
+    rows.append(scenario_row("fig11/cloud_remote_minio", remote))
 
-    _, gcf = _run(REMOTE_STORE, "google-cloud-cluster")
-    rows.append(result_row("fig11/gcf_near_data", gcf, DURATION))
+    _, _, gcf = _arm("gcf-near-data")
+    rows.append(scenario_row("fig11/gcf_near_data", gcf))
 
-    cp, migrated = _run(REMOTE_STORE, "cloud-cluster", migrate_first=True)
-    rows.append(result_row(
-        "fig11/cloud_after_migration", migrated, DURATION,
-        extra=f"migrations={cp.placement.migrations}"))
+    _, cp, migrated = _arm("cloud-after-migration")
+    rows.append(scenario_row("fig11/cloud_after_migration", migrated,
+                             extra=f"migrations={cp.placement.migrations}"))
 
-    check(local.requests_per_s(DURATION) > remote.requests_per_s(DURATION),
+    check(local["rps"] > remote["rps"],
           "local MinIO should serve more req/s than remote", failures)
-    check(local.p90_response() < remote.p90_response(),
+    check(local["p90_s"] < remote["p90_s"],
           "local MinIO should have lower P90 than remote", failures)
-    check(gcf.p90_response() > local.p90_response(),
+    check(gcf["p90_s"] > local["p90_s"],
           "gcf-near-data should be worse than cloud-local", failures)
-    check(migrated.p90_response() < remote.p90_response() * 1.05,
+    check(migrated["p90_s"] < remote["p90_s"] * 1.05,
           "migration should recover (near-)local performance", failures)
     check(cp.placement.migrations >= 1, "migration must have happened",
           failures)

@@ -1,6 +1,10 @@
 """Fig. 9: image-processing, 40 VUs on old-hpc-node-cluster with background
 MEMORY load in {0%, 50%, 100%}.
 
+Runs through the FDNInspector scenario runner (``registry.fig9_cell``,
+``Scenario.bg_mem`` carries the interference knob) instead of a hand-wired
+control plane; stats come from each cell's ``ScenarioReport``.
+
 Paper claims validated here:
   * +50% memory load: no performance change (free memory still available
     for replicas);
@@ -10,10 +14,9 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import (Row, build_fdn, check, result_row,
-                                   run_on_platform)
+from benchmarks.fdn_common import Row, check, scenario_row
+from repro.inspector import registry, run_scenario
 
-DURATION = 120.0
 PLATFORM = "old-hpc-node-cluster"
 
 
@@ -22,13 +25,10 @@ def run_bench() -> Tuple[List[Row], List[str]]:
     failures: List[str] = []
     stats = {}
     for bg in (0.0, 0.5, 1.0):
-        cp, gw, fns = build_fdn(data_location=PLATFORM)
-        cp.platforms[PLATFORM].bg_mem = bg
-        res = run_on_platform(cp, gw, fns["image-processing"], PLATFORM, 40,
-                              DURATION, sleep_s=0.5)
-        rows.append(result_row(f"fig9/image-processing/bg_mem{int(bg*100)}",
-                               res, DURATION))
-        stats[bg] = (res.p90_response(), res.requests_per_s(DURATION))
+        rep = run_scenario(registry.fig9_cell(bg))
+        cell = rep.per_platform[PLATFORM]
+        rows.append(scenario_row(rep.scenario["name"], cell))
+        stats[bg] = (cell["p90_s"], cell["rps"])
 
     check(stats[0.5][0] < 1.25 * stats[0.0][0],
           "50% memory load should not hurt P90", failures)

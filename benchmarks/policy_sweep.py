@@ -2,6 +2,12 @@
 same mixed workload (the experiment the paper's outlook §9 calls for, with
 the FDN now actually built).
 
+Runs through the FDNInspector scenario runner (``registry.
+policy_sweep_cell`` — four closed-loop streams per policy arm, plus the
+open-loop Poisson arm through the batched gateway path).  Stream seeds are
+derived deterministically by the runner; the old hand-wired sweep seeded
+VU pools with salted ``hash(fn)`` and was not replayable across processes.
+
 Claims asserted:
   * the SLO-composite policy meets >=99% of SLOs at LOWER energy than
     round-robin (the FDN trade-off the paper argues for);
@@ -12,49 +18,27 @@ from __future__ import annotations
 
 from typing import List, Tuple
 
-from benchmarks.fdn_common import Row, build_fdn, check
-from repro.core import (EnergyAwarePolicy, PerformanceRankedPolicy,
-                        RoundRobinCollaboration, SLOCompositePolicy,
-                        UtilizationAwarePolicy)
-from repro.core.loadgen import (ColumnarResultSink, poisson_arrivals,
-                                run_arrivals, run_load)
+from benchmarks.fdn_common import Row, check
+from repro.inspector import registry, run_scenario
 
 DURATION = 90.0
-OPEN_LOOP_RPS = 60.0
 
 
-def _run(policy_name: str):
-    cp, gw, fns = build_fdn()
-    policy = {
-        "perf_ranked": lambda: PerformanceRankedPolicy(cp.perf),
-        "utilization": lambda: UtilizationAwarePolicy(cp.perf),
-        "round_robin": lambda: RoundRobinCollaboration(),
-        "energy": lambda: EnergyAwarePolicy(cp.perf),
-        "slo_composite": lambda: SLOCompositePolicy(cp.perf, cp.placement),
-    }[policy_name]()
-    cp.policy = policy
-    invs = []
-    for fn in ("nodeinfo", "primes-python", "JSON-loads",
-               "image-processing"):
-        res = run_load(cp.clock, lambda i: gw.request(i), fns[fn], vus=8,
-                       duration_s=DURATION, sleep_s=0.1,
-                       seed=hash(fn) % 1000)
-        invs += res.completed
-    met = sum(1 for i in invs
-              if i.response_time is not None
-              and i.response_time <= i.fn.slo.p90_response_s)
-    joules = sum(cp.energy.joules(p) for p in cp.platforms)
-    from repro.core.monitoring import percentile
-    p90 = percentile(sorted(i.response_time for i in invs), 0.90)
-    return {"met": met, "n": len(invs), "joules": joules, "p90": p90}
+def _run(policy: str):
+    rep = run_scenario(registry.policy_sweep_cell(policy,
+                                                  duration_s=DURATION))
+    t = rep.totals
+    joules = sum(p["energy_j"] for p in rep.per_platform.values())
+    met = t["completed"] - t["slo_violations"] + t["rejected"]
+    return {"met": met, "n": t["completed"], "joules": joules,
+            "p90": t["p90_s"], "rejected": t["rejected"]}
 
 
 def run_bench() -> Tuple[List[Row], List[str]]:
     rows: List[Row] = []
     failures: List[str] = []
     stats = {}
-    for name in ("perf_ranked", "utilization", "round_robin", "energy",
-                 "slo_composite"):
+    for name in registry.SWEEP_POLICIES:
         s = _run(name)
         stats[name] = s
         rows.append(Row(f"policy_sweep/{name}", s["p90"] * 1e6,
@@ -67,28 +51,25 @@ def run_bench() -> Tuple[List[Row], List[str]]:
     check(comp["joules"] < stats["round_robin"]["joules"],
           "composite should use less energy than round-robin at equal "
           "compliance", failures)
-    check(stats["energy"]["joules"] <= stats["perf_ranked"]["joules"],
+    check(stats["energy_aware"]["joules"] <= stats["perf_ranked"]["joules"],
           "energy-aware should burn less than perf-ranked", failures)
     check(stats["perf_ranked"]["p90"] <= stats["round_robin"]["p90"],
           "perf-ranked should have lower P90 than round-robin", failures)
 
     # open-loop Poisson arrivals through the batched gateway path: the
     # composite policy must hold the SLO under burst admission too
-    cp, gw, fns = build_fdn()
-    sink = ColumnarResultSink().install(cp)
-    arrivals = poisson_arrivals(OPEN_LOOP_RPS, DURATION, seed=11)
-    run_arrivals(cp.clock, gw.request_batch, fns["nodeinfo"], arrivals,
-                 batch_window_s=0.1, sink=sink)
+    rep = run_scenario(registry.policy_sweep_open_loop(DURATION))
+    t = rep.totals
+    nodeinfo = rep.per_function["nodeinfo"]
     rows.append(Row("policy_sweep/slo_composite_open_loop",
-                    sink.mean_response() * 1e6,
-                    f"p90_s={sink.p90_response():.3f};"
-                    f"rps={sink.requests_per_s(DURATION):.1f};"
-                    f"n={sink.completed};rejected={sink.rejected}"))
-    check(sink.rejected == 0,
+                    t["mean_s"] * 1e6,
+                    f"p90_s={t['p90_s']:.3f};rps={t['rps']:.1f};"
+                    f"n={t['completed']};rejected={t['rejected']}"))
+    check(t["rejected"] == 0,
           "open-loop batched path should admit every arrival", failures)
-    check(sink.completed == arrivals.size,
+    check(t["completed"] == t["submitted"],
           "open-loop batched path should complete every arrival", failures)
-    check(sink.p90_response() <= fns["nodeinfo"].slo.p90_response_s,
+    check(t["p90_s"] <= nodeinfo["slo_s"],
           "open-loop batched path should meet the nodeinfo SLO", failures)
     return rows, failures
 

@@ -29,6 +29,7 @@ BENCHES = [
     "bench_metrics_ingest",
     "bench_chain_throughput",
     "bench_autoscale",
+    "bench_streaming_replay",
 ]
 
 

@@ -13,6 +13,7 @@ Quick start:
 """
 from repro.core.types import (SLO, FunctionSpec, Invocation,
                               PlatformProfile, DeploymentSpec)
+from repro.core.invocation_batch import InvocationBatch
 from repro.core.simulator import SimClock
 from repro.core.control_plane import FDNControlPlane, AccessControl
 from repro.core.gateway import Gateway
@@ -27,17 +28,17 @@ from repro.core.sidecar import SidecarController
 from repro.core.monitoring import (ColumnarWindowSeries, MetricsRegistry,
                                    WindowSeries)
 from repro.core.behavioral import (P2Quantile, EWMA, EventModel,
-                                   FunctionPerformanceModel)
+                                   FunctionPerformanceModel, PerfState,
+                                   compose_functions, composition_plan)
 from repro.core.knowledge_base import KnowledgeBase
 from repro.core.deployment import DeploymentGenerator
 from repro.core.data_placement import DataPlacementManager, ObjectStore
 from repro.core.energy import EnergyMeter
 from repro.core.faults import FailureDetector, Redeliverer, HedgePolicy
-from repro.core.recommend import Recommender
-from repro.core.tuning import ThresholdTuner, compose_functions
 
 __all__ = [
-    "SLO", "FunctionSpec", "Invocation", "PlatformProfile",
+    "SLO", "FunctionSpec", "Invocation", "InvocationBatch",
+    "PlatformProfile",
     "DeploymentSpec", "SimClock", "FDNControlPlane", "AccessControl",
     "Gateway", "TargetPlatform", "ExecutionModel", "POLICIES",
     "PerformanceRankedPolicy", "UtilizationAwarePolicy",
@@ -46,8 +47,9 @@ __all__ = [
     "WarmAwarePolicy",
     "SidecarController", "MetricsRegistry", "ColumnarWindowSeries",
     "WindowSeries", "P2Quantile", "EWMA",
-    "EventModel", "FunctionPerformanceModel", "KnowledgeBase",
+    "EventModel", "FunctionPerformanceModel", "PerfState",
+    "KnowledgeBase",
     "DeploymentGenerator", "DataPlacementManager", "ObjectStore",
     "EnergyMeter", "FailureDetector", "Redeliverer", "HedgePolicy",
-    "Recommender", "ThresholdTuner", "compose_functions",
+    "compose_functions", "composition_plan",
 ]

@@ -8,13 +8,16 @@ locally -> completion feeds Monitoring + Behavioral models + KnowledgeBase.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from repro.core.behavioral import (EventModel, FunctionPerformanceModel,
                                    InteractionModel)
 from repro.core.data_placement import DataPlacementManager
 from repro.core.energy import EnergyMeter
 from repro.core.faults import FailureDetector, HedgePolicy, Redeliverer
+from repro.core.invocation_batch import InvocationBatch
 from repro.core.knowledge_base import KnowledgeBase
 from repro.core.monitoring import MetricsRegistry
 from repro.core.platform import TargetPlatform
@@ -174,9 +177,16 @@ class FDNControlPlane:
                              lambda i, p: self.sidecars[p.prof.name].admit(i))
         return True
 
-    def submit_batch(self, invs: Sequence[Invocation],
+    def submit_batch(self,
+                     invs: Union[Sequence[Invocation], InvocationBatch],
                      platform_override: Optional[str] = None) -> int:
         """Admit a whole arrival batch in ONE fused policy evaluation.
+
+        Accepts either a sequence of ``Invocation`` objects or an
+        ``InvocationBatch`` (struct-of-arrays).  The columnar form routes
+        through ``_submit_columns`` — same decisions, same admission
+        order, but no per-arrival Python object until a replica actually
+        starts one.
 
         One pass groups the batch by distinct function and folds the
         arrival bookkeeping (rate model counts, co-invocation edges) into
@@ -199,6 +209,8 @@ class FDNControlPlane:
         number of accepted invocations; rejected ones land in
         ``self.rejected``.
         """
+        if isinstance(invs, InvocationBatch):
+            return self._submit_columns(invs, platform_override)
         if not invs:
             return 0
         now = self.clock.now()
@@ -349,6 +361,90 @@ class FDNControlPlane:
                     alt_cache[pname] = alternates
                 self.hedge.watch_group(members, target, alternates,
                                        self._admit_hedges)
+        return accepted
+
+    def _submit_columns(self, batch: InvocationBatch,
+                        platform_override: Optional[str] = None) -> int:
+        """Array-native ``submit_batch``: decide and route straight off
+        the batch's columns.
+
+        Arrival bookkeeping is one bincount + one columnar interaction
+        fold; the policy makes one fused decision per distinct function
+        present (``present_fns`` keeps the object path's first-appearance
+        group order, so per-platform admission order — and therefore
+        every queue timing — is identical to submitting the materialized
+        objects).  Paths that need real objects (decision-row logging,
+        hedging, stateful per-row policies) fall back to the object path
+        wholesale.  Platform targets receive ``admit_columns`` index
+        groups; ``Invocation`` objects only materialize when a replica
+        starts (or for retained rejections).
+        """
+        if batch.n == 0:
+            return 0
+        if self.kb.log_decisions or self.hedge.enabled:
+            return self.submit_batch(batch.to_invocations(),
+                                     platform_override)
+        now = self.clock.now()
+        specs = batch.specs
+        fidx = batch.fn_idx
+        if not batch.arrival_recorded:
+            batch.arrival_recorded = True
+            counts = np.bincount(fidx, minlength=len(specs))
+            for j, c in enumerate(counts):
+                if c:
+                    self.events.record_many(specs[j].name, now, int(c))
+            self.interactions.record_batch_columns(
+                fidx, [s.name for s in specs], now)
+        present = batch.present_fns()
+        pres_specs = [specs[int(j)] for j in present]
+        if self.predictive_prewarm:
+            seen: Dict[str, FunctionSpec] = {}
+            for fn in pres_specs:
+                seen.setdefault(fn.name, fn)
+            for fn in seen.values():
+                self._maybe_prewarm(fn)
+
+        if platform_override is not None:
+            ov = self.platforms.get(platform_override)
+            tmap: List[Optional[TargetPlatform]] = [ov] * len(present)
+        else:
+            snap = as_snapshot(self.alive_platforms())
+            res = self.policy.fn_decisions(pres_specs, snap, n=batch.n)
+            if res is None:             # stateful policy: needs real rows
+                invs = batch.to_invocations()
+                for inv in invs:        # bookkeeping already folded above
+                    inv.arrival_recorded = True
+                return self.submit_batch(invs, platform_override)
+            idx, ok = res
+            plats = snap.platforms
+            tmap = [plats[int(idx[g])] if ok[g] else None
+                    for g in range(len(present))]
+
+        accepted = 0
+        pname_groups: Dict[str, List[np.ndarray]] = {}
+        for g, j in enumerate(present):
+            target = tmap[g]
+            idxs = np.nonzero(fidx == j)[0]
+            if target is None:
+                batch.state[idxs] = InvocationBatch.REJECTED
+                self.rejected_count += int(idxs.size)
+                if self.retain_completions:
+                    for i in idxs:
+                        inv = batch.materialize(int(i))
+                        inv.status = "failed"
+                        self.rejected.append(inv)
+                continue
+            batch.state[idxs] = InvocationBatch.ADMITTED
+            group = pname_groups.get(target.prof.name)
+            if group is None:
+                pname_groups[target.prof.name] = [idxs]
+            else:
+                group.append(idxs)
+            accepted += int(idxs.size)
+        self.kb.count_decisions(accepted)
+        for pname, parts in pname_groups.items():
+            idxs = parts[0] if len(parts) == 1 else np.concatenate(parts)
+            self.sidecars[pname].admit_columns(batch, idxs)
         return accepted
 
     def _admit_hedges(self, dups: List[Invocation],

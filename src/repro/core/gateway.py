@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.control_plane import FDNControlPlane
+from repro.core.invocation_batch import InvocationBatch
 from repro.core.scheduler import Policy
 from repro.core.types import Invocation
 
@@ -49,16 +50,24 @@ class Gateway:
                       principal: Optional[str] = None,
                       token: Optional[str] = None) -> int:
         """Admit a whole arrival burst: auth once, route once, submit in
-        per-platform groups.  Returns the number of accepted invocations."""
-        if not invs:
+        per-platform groups.  Accepts a plain sequence or an
+        ``InvocationBatch`` (columnar batches pass straight through to the
+        control plane; a gateway load-balancer needs object rows).
+        Returns the number of accepted invocations."""
+        if not len(invs):
             return 0
         if not self._authorized(principal, token):
             self.unauthorized += len(invs)
-            for inv in invs:
-                inv.status = "failed"
+            if isinstance(invs, InvocationBatch):
+                invs.state[:] = InvocationBatch.REJECTED
+            else:
+                for inv in invs:
+                    inv.status = "failed"
             return 0
         if self.lb_policy is None:
             return self.cp.submit_batch(invs)
+        if isinstance(invs, InvocationBatch):
+            invs = invs.to_invocations()
         targets = self.lb_policy.choose_batch(invs,
                                               self.cp.alive_platforms())
         groups: Dict[str, List[Invocation]] = {}

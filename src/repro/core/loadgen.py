@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.invocation_batch import InvocationBatch
 from repro.core.simulator import SimClock
 from repro.core.types import FunctionSpec, Invocation
 
@@ -328,8 +329,8 @@ def schedule_arrival_mix(clock: SimClock,
                          submit_batch: Callable[[List[Invocation]], int],
                          specs: Sequence[FunctionSpec], times: np.ndarray,
                          fn_idx: np.ndarray, batch_window_s: float = 0.05,
-                         sink: Optional[ColumnarResultSink] = None
-                         ) -> ColumnarResultSink:
+                         sink: Optional[ColumnarResultSink] = None,
+                         columnar: bool = False) -> ColumnarResultSink:
     """Enqueue a multi-function arrival stream WITHOUT running the clock.
 
     ``times`` is the merged, sorted admission stream; ``fn_idx[i]`` indexes
@@ -337,6 +338,12 @@ def schedule_arrival_mix(clock: SimClock,
     case).  Arrivals inside one ``batch_window_s`` sub-window are admitted
     together at the window's close; each invocation keeps its true arrival
     timestamp, so measured response times include the admission delay.
+
+    ``columnar=True`` builds ONE ``InvocationBatch`` over the whole stream
+    and fires zero-copy chunk views per sub-window — no per-arrival
+    ``Invocation`` object is created at admission time (the platform
+    materializes rows lazily as replicas start them).  Decisions and
+    timings are identical to the object path.
     """
     sink = sink or ColumnarResultSink()
     times = np.asarray(times, dtype=float)
@@ -345,12 +352,21 @@ def schedule_arrival_mix(clock: SimClock,
         return sink
     bounds = _burst_bounds(times, batch_window_s)
 
-    def fire(lo: int, hi: int):
-        invs = [Invocation(specs[fn_idx[i]], float(times[i]))
-                for i in range(lo, hi)]
-        sink.submitted += len(invs)
-        accepted = submit_batch(invs)
-        sink.rejected += len(invs) - accepted
+    if columnar:
+        stream = InvocationBatch(list(specs), fn_idx, times)
+
+        def fire(lo: int, hi: int):
+            chunk = stream.view(lo, hi)
+            sink.submitted += chunk.n
+            accepted = submit_batch(chunk)
+            sink.rejected += chunk.n - accepted
+    else:
+        def fire(lo: int, hi: int):
+            invs = [Invocation(specs[fn_idx[i]], float(times[i]))
+                    for i in range(lo, hi)]
+            sink.submitted += len(invs)
+            accepted = submit_batch(invs)
+            sink.rejected += len(invs) - accepted
 
     clock.schedule_many([float(times[hi - 1]) for lo, hi in bounds],
                         [lambda lo=lo, hi=hi: fire(lo, hi)
@@ -363,11 +379,12 @@ def run_arrival_mix(clock: SimClock,
                     specs: Sequence[FunctionSpec], times: np.ndarray,
                     fn_idx: np.ndarray, batch_window_s: float = 0.05,
                     sink: Optional[ColumnarResultSink] = None,
-                    drain_s: float = 120.0) -> ColumnarResultSink:
+                    drain_s: float = 120.0,
+                    columnar: bool = False) -> ColumnarResultSink:
     """Open-loop replay of a multi-function arrival mix, then drain."""
     times = np.asarray(times, dtype=float)
     sink = schedule_arrival_mix(clock, submit_batch, specs, times, fn_idx,
-                                batch_window_s, sink)
+                                batch_window_s, sink, columnar=columnar)
     if times.size:
         t_end = float(times[-1])
         clock.run_until(t_end)

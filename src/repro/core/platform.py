@@ -42,6 +42,21 @@ from repro.core.types import FunctionSpec, Invocation, PlatformProfile
 COLD, PREWARM, WARM = "cold", "prewarm", "warm"
 
 
+class _ColumnarEntry:
+    """Queue entry for one columnar admission group: row indices into an
+    ``InvocationBatch``, consumed head-first by the drain.  ``Invocation``
+    objects materialize one by one exactly when a replica starts them;
+    ``t`` is the group's enqueue time (the members' ``scheduled_t``)."""
+
+    __slots__ = ("batch", "idxs", "pos", "t")
+
+    def __init__(self, batch, idxs, t: float):
+        self.batch = batch
+        self.idxs = idxs
+        self.pos = 0
+        self.t = t
+
+
 class Replica:
     __slots__ = ("state", "busy", "last_used", "fn", "retired")
 
@@ -294,6 +309,46 @@ class TargetPlatform:
             self._drain()
             self._schedule_idler()
 
+    def invoke_columns(self, batch, idxs: np.ndarray):
+        """Array-native entry point: enqueue a whole admission group as
+        ONE ``_ColumnarEntry`` and drain once.
+
+        FIFO semantics are identical to ``invoke_batch`` over the
+        materialized rows — the drain consumes the entry head-first in
+        index order — but no ``Invocation`` object exists until a replica
+        actually starts a row (undeployed/failed rows materialize just to
+        travel the failure path, like the object path fails them before
+        queueing the rest)."""
+        if idxs.size == 0:
+            return
+        batch_fidx = batch.fn_idx
+        specs = batch.specs
+        if self.failed:
+            for i in idxs:
+                self._fail(batch.materialize(int(i)), "platform down")
+            return
+        deployed = self.deployed
+        dep_ok = np.array([s.name in deployed for s in specs])
+        if not dep_ok.all():
+            member_ok = dep_ok[batch_fidx[idxs]]
+            if not member_ok.all():
+                for i in idxs[~member_ok]:
+                    self._fail(batch.materialize(int(i)),
+                               "function not deployed")
+                idxs = idxs[member_ok]
+                if idxs.size == 0:
+                    return
+        counts = self.autoscale_counts
+        if counts is not None:
+            c = np.bincount(batch_fidx[idxs], minlength=len(specs))
+            for j, k in enumerate(c):
+                if k:
+                    name = specs[j].name
+                    counts[name] = counts.get(name, 0) + int(k)
+        self.queue.append(_ColumnarEntry(batch, idxs, self.clock.now()))
+        self._drain()
+        self._schedule_idler()
+
     def _enqueue(self, inv: Invocation) -> bool:
         if self.failed:
             self._fail(inv, "platform down")
@@ -361,9 +416,16 @@ class TargetPlatform:
             # state, so costs are evaluated per invocation in FIFO order
             hoist = self.placement is None or not self.placement.cache_enabled
             fn_cache: Dict[int, list] = {}   # id(fn) -> [exec, data, fn, n]
+            pname = prof.name
             while queue:
-                inv = queue[0]
-                fn = inv.fn
+                head = queue[0]
+                entry = head if type(head) is _ColumnarEntry else None
+                if entry is not None:
+                    b = entry.batch
+                    i = int(entry.idxs[entry.pos])
+                    fn = b.specs[b.fn_idx[i]]
+                else:
+                    fn = head.fn
                 rep = self._find_replica(fn.name)
                 if rep is None:
                     if not self.can_start_replica(fn):
@@ -373,7 +435,21 @@ class TargetPlatform:
                     spec = self.deployed.get(fn.name)
                     if spec is not None:
                         self._mem_replicas_mb += spec.memory_mb
-                queue.popleft()
+                if entry is None:
+                    inv = head
+                    queue.popleft()
+                else:
+                    # lazy materialization: the Invocation object is born
+                    # at replica-assignment time, with the bookkeeping the
+                    # object path applied at enqueue
+                    inv = b.materialize(i)
+                    inv.platform = pname
+                    inv.scheduled_t = entry.t
+                    inv.status = "queued"
+                    self.inflight[inv.id] = inv
+                    entry.pos += 1
+                    if entry.pos == entry.idxs.size:
+                        queue.popleft()
                 state = rep.state
                 if state == COLD:
                     startups.append(prof.cold_start_s)
@@ -650,9 +726,18 @@ class TargetPlatform:
 
     # ------------------------------------------------------------ faults --
     def fail(self):
-        """Platform outage: every in-flight invocation is lost."""
+        """Platform outage: every in-flight invocation is lost.  Queued
+        columnar rows that never materialized are materialized now so they
+        travel the same failure path (redelivery sees real objects)."""
         self.failed = True
         lost = list(self.inflight.values())
+        for head in self.queue:
+            if type(head) is _ColumnarEntry:
+                for i in head.idxs[head.pos:]:
+                    inv = head.batch.materialize(int(i))
+                    inv.platform = self.prof.name
+                    inv.scheduled_t = head.t
+                    lost.append(inv)
         self.inflight.clear()
         self.queue.clear()
         for inv in lost:

@@ -134,7 +134,7 @@ class PlatformSnapshot:
 
     __slots__ = ("platforms", "profs", "names", "n", "failed",
                  "total_memory_mb", "cpu_util", "mem_util", "cold_start_s",
-                 "_warm_total", "_fn_cache")
+                 "_warm_total", "_power", "_fn_cache")
 
     def __init__(self, platforms: Sequence[TargetPlatform]):
         self.platforms = list(platforms)
@@ -156,6 +156,7 @@ class PlatformSnapshot:
         self.cold_start_s = np.array([float(pr.cold_start_s)
                                       for pr in self.profs])
         self._warm_total: Optional[np.ndarray] = None
+        self._power: Optional[Tuple[np.ndarray, np.ndarray]] = None
         self._fn_cache: Dict[tuple, FnView] = {}
 
     @property
@@ -165,21 +166,25 @@ class PlatformSnapshot:
                 [float(p.idle_warm_total()) for p in self.platforms])
         return self._warm_total
 
+    @property
+    def power(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(nodes, loaded watts/node) per-platform vectors — the energy
+        terms of the fused admission step."""
+        if self._power is None:
+            self._power = (
+                np.array([float(pr.nodes) for pr in self.profs]),
+                np.array([pr.loaded_w_per_node for pr in self.profs]))
+        return self._power
+
     @staticmethod
     def _util(p, attr: str) -> float:
         f = getattr(p, attr, None)
         return float(f()) if callable(f) else 0.0
 
-    def fn_view(self, fn: FunctionSpec,
-                perf: Optional[FunctionPerformanceModel] = None,
-                placement: Optional[DataPlacementManager] = None,
-                p90: bool = False, energy: bool = False) -> FnView:
-        """Columns are computed on demand (a perf-ranked policy must not
-        pay for P90/energy predictions) and filled incrementally on cache
-        hits when a later policy asks for more."""
-        # keyed by object identity: FunctionSpec hashing walks every field,
-        # which is far too slow for 10^5-row batches
-        key = (id(fn), id(perf), id(placement))
+    def _base_view(self, key: tuple, fn: FunctionSpec,
+                   placement: Optional[DataPlacementManager]) -> FnView:
+        """The prediction-free columns of one function's view (liveness,
+        data-access seconds, warm-pool) — created once per cache key."""
         v = self._fn_cache.get(key)
         if v is None:
             v = FnView(fn)
@@ -196,6 +201,19 @@ class PlatformSnapshot:
             v.warm_free = np.array(
                 [float(p.idle_warm(fn.name)) for p in self.platforms])
             self._fn_cache[key] = v
+        return v
+
+    def fn_view(self, fn: FunctionSpec,
+                perf: Optional[FunctionPerformanceModel] = None,
+                placement: Optional[DataPlacementManager] = None,
+                p90: bool = False, energy: bool = False) -> FnView:
+        """Columns are computed on demand (a perf-ranked policy must not
+        pay for P90/energy predictions) and filled incrementally on cache
+        hits when a later policy asks for more."""
+        # keyed by object identity: FunctionSpec hashing walks every field,
+        # which is far too slow for 10^5-row batches
+        v = self._base_view((id(fn), id(perf), id(placement)), fn,
+                            placement)
         if perf is not None:
             if v.exec_s is None:
                 v.exec_s = np.array([perf.predict_exec(fn, pr)
@@ -214,9 +232,38 @@ class PlatformSnapshot:
                   p90: bool = False, energy: bool = False
                   ) -> Dict[str, np.ndarray]:
         """(F, P) matrices stacked from the per-function views — the
-        columnar input the jitted decision cascades consume."""
-        views = [self.fn_view(fn, perf, placement, p90=p90, energy=energy)
-                 for fn in fns]
+        columnar input the jitted decision cascades consume.
+
+        Prediction columns for functions not yet in the snapshot cache
+        are built by ONE vectorized ``perf.predict_matrix`` pass over the
+        columnar estimator state (bit-identical to the scalar
+        ``predict_*`` loop the single-function path keeps)."""
+        if perf is None or len(fns) == 1:
+            views = [self.fn_view(fn, perf, placement, p90=p90,
+                                  energy=energy) for fn in fns]
+        else:
+            views = [self._base_view((id(fn), id(perf), id(placement)),
+                                     fn, placement) for fn in fns]
+            seen = set()
+            fill_fns, fill_views = [], []
+            for fn, v in zip(fns, views):
+                if id(fn) in seen:
+                    continue
+                seen.add(id(fn))
+                if v.exec_s is None or (p90 and v.p90_s is None) or \
+                        (energy and v.energy_j is None):
+                    fill_fns.append(fn)
+                    fill_views.append(v)
+            if fill_fns:
+                m = perf.predict_matrix(fill_fns, self.profs, p90=p90,
+                                        energy=energy)
+                for r, v in enumerate(fill_views):
+                    if v.exec_s is None:
+                        v.exec_s = m["exec_s"][r]
+                    if p90 and v.p90_s is None:
+                        v.p90_s = m["p90_s"][r]
+                    if energy and v.energy_j is None:
+                        v.energy_j = m["energy_j"][r]
         if len(views) == 1:                  # scalar choose: views, no copy
             v = views[0]
             out = {"alive": v.alive[None], "data_s": v.data_s[None],
@@ -598,13 +645,21 @@ class SLOCompositePolicy(Policy):
         return _masked(cost, feasible)
 
     def _jax_decide(self, fns, snap):
+        """ONE fused jit step from raw estimator state: snapshot
+        prediction columns (EWMA/P² gates, power model), filter cascade
+        and argmin all compile into a single device program — the host
+        never materializes exec/P90/energy matrices on this path."""
         ps = _policy_score_mod()
-        m = self._columns(fns, snap)
-        args = (m["exec_s"], m["data_s"], m["p90_s"], m["energy_j"],
-                m["alive"], self._unloaded(snap), _slo_vector(fns))
+        base = snap.fn_matrix(fns, None, self.placement)
+        est = self.perf.estimator_columns(fns, snap.profs)
+        nodes, loaded_w = snap.power
+        args = (est["ewma_v"], est["ewma_n"], est["analytic_s"],
+                est["resp_h2"], est["resp_n"], base["data_s"], nodes,
+                loaded_w, base["alive"], self._unloaded(snap),
+                _slo_vector(fns), self.energy_weight)
         if ps.use_pallas():
-            return ps.composite_decide_pallas(*args, self.energy_weight)
-        return ps.composite_decide(*args, self.energy_weight)
+            return ps.fused_composite_decide_pallas(*args)
+        return ps.fused_composite_decide(*args)
 
 
 POLICIES = {cls.name: cls for cls in

@@ -42,6 +42,12 @@ class SidecarController:
         paying a full queue drain + metrics sample per invocation."""
         self.platform.invoke_batch(invs)
 
+    def admit_columns(self, batch, idxs):
+        """Columnar admission (``_submit_columns``): the platform queues
+        the (batch, index-group) pair directly; ``Invocation`` objects
+        appear only when the drain actually starts a row."""
+        self.platform.invoke_columns(batch, idxs)
+
     # local trigger path -------------------------------------------------
     def _pressured(self) -> bool:
         p = self.platform

@@ -8,14 +8,16 @@
 
 ``scenario`` — declarative Scenario spec + runner + versioned
 ScenarioReport; ``traces`` — FaaS trace library (Azure minute counts,
-diurnal / MMPP / ramp generators, WorkloadMix); ``registry`` — named
-scenarios: the paper's figures/tables re-expressed, plus mixes the
+diurnal / MMPP / ramp generators, WorkloadMix); ``streaming`` — chunked
+columnar replay of Azure-scale traces in bounded memory; ``registry`` —
+named scenarios: the paper's figures/tables re-expressed, plus mixes the
 hand-wired benchmarks could not express.
 """
 from repro.inspector.scenario import (SCHEMA_VERSION, FaultEvent, Scenario,
                                       ScenarioReport, Workload, assemble,
                                       build_report, run_scenario,
                                       run_scenario_state)
+from repro.inspector.streaming import StreamStats, stream_replay
 from repro.inspector.traces import (WorkloadMix, build_arrivals,
                                     counts_to_arrivals, diurnal_arrivals,
                                     load_azure_invocations_csv,
@@ -27,6 +29,7 @@ __all__ = [
     "SCHEMA_VERSION", "FaultEvent", "Scenario", "ScenarioReport",
     "Workload", "assemble", "build_report", "run_scenario",
     "run_scenario_state",
+    "StreamStats", "stream_replay",
     "WorkloadMix", "build_arrivals", "counts_to_arrivals",
     "diurnal_arrivals", "load_azure_invocations_csv", "mmpp_arrivals",
     "ramp_arrivals", "synthetic_azure_counts", "registry",

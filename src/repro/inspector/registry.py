@@ -14,7 +14,8 @@ from __future__ import annotations
 from typing import Callable, Dict, List
 
 from repro.inspector import traces
-from repro.inspector.scenario import FaultEvent, Scenario, Workload
+from repro.inspector.scenario import (IMAGE_KEY, REMOTE_STORE, FaultEvent,
+                                      Scenario, Workload)
 
 PAPER_FIVE = ("hpc-node-cluster", "old-hpc-node-cluster", "cloud-cluster",
               "google-cloud-cluster", "edge-cluster")
@@ -115,6 +116,81 @@ def fig8_cell(bg_cpu: float, duration_s: float = 120.0,
         duration_s=duration_s, platform_override=platform,
         data_location=platform, bg_cpu={platform: bg_cpu},
         analytic=analytic)
+
+
+def fig9_cell(bg_mem: float, duration_s: float = 120.0,
+              analytic: bool = False) -> Scenario:
+    """Fig. 9: image-processing at 40 VUs on old-hpc with background
+    MEMORY load in {0%, 50%, 100%} — the swap-cliff twin of fig8."""
+    platform = "old-hpc-node-cluster"
+    return Scenario(
+        name=f"fig9/image-processing/bg_mem{int(bg_mem * 100)}",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("image-processing", mode="closed", vus=40,
+                            sleep_s=0.5),),
+        duration_s=duration_s, platform_override=platform,
+        data_location=platform, bg_mem={platform: bg_mem},
+        analytic=analytic)
+
+
+FIG11_ARMS = {
+    # variant -> (compute platform, data location, pre-run migrations)
+    "cloud-local-minio": ("cloud-cluster", "cloud-cluster", ()),
+    "cloud-remote-minio": ("cloud-cluster", REMOTE_STORE, ()),
+    "gcf-near-data": ("google-cloud-cluster", REMOTE_STORE, ()),
+    "cloud-after-migration": ("cloud-cluster", REMOTE_STORE,
+                              ((IMAGE_KEY, "cloud-cluster"),)),
+}
+
+
+def fig11_cell(variant: str, duration_s: float = 120.0,
+               analytic: bool = False) -> Scenario:
+    """Fig. 11: image-processing at 20 VUs — local vs remote MinIO vs
+    compute-near-data vs migrate-then-run (§5.1.4 adaptive data
+    management).  With ``data_location=REMOTE_STORE`` the runner seeds the
+    object at the remote store ONLY, so the remote arms read across the
+    WAN by construction."""
+    platform, data_loc, migrations = FIG11_ARMS[variant]
+    return Scenario(
+        name=f"fig11/{variant}",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("image-processing", mode="closed", vus=20,
+                            sleep_s=0.2),),
+        duration_s=duration_s, platform_override=platform,
+        data_location=data_loc, migrate_objects=migrations,
+        analytic=analytic)
+
+
+SWEEP_POLICIES = ("perf_ranked", "utilization_aware", "round_robin",
+                  "energy_aware", "slo_composite")
+SWEEP_FNS = ("nodeinfo", "primes-python", "JSON-loads", "image-processing")
+
+
+def policy_sweep_cell(policy: str, duration_s: float = 90.0,
+                      analytic: bool = True) -> Scenario:
+    """One arm of the all-policy head-to-head: four closed-loop function
+    streams over the five platforms under ``policy`` (deterministic
+    per-stream seeds come from the runner — the old hand-wired sweep
+    seeded VU pools with salted ``hash(fn)``)."""
+    return Scenario(
+        name=f"sweep/{policy}",
+        platforms=PAPER_FIVE,
+        workloads=tuple(Workload(fn, mode="closed", vus=8, sleep_s=0.1)
+                        for fn in SWEEP_FNS),
+        duration_s=duration_s, policy=policy, analytic=analytic)
+
+
+def policy_sweep_open_loop(duration_s: float = 90.0,
+                           rps: float = 60.0) -> Scenario:
+    """The sweep's open-loop arm: Poisson nodeinfo through the batched
+    gateway path under the composite policy (burst admission must hold
+    the SLO too)."""
+    return Scenario(
+        name="sweep/slo_composite-open-loop",
+        platforms=PAPER_FIVE,
+        workloads=(Workload("nodeinfo",
+                            arrival={"kind": "poisson", "rps": rps}),),
+        duration_s=duration_s, batch_window_s=0.1)
 
 
 def table4_cell(platform: str, duration_s: float = 600.0, rps: float = 40.0,

@@ -115,6 +115,10 @@ class Scenario:
     seed: int = 42
     analytic: bool = True                    # strip real JAX callables
     batch_window_s: float = 0.05
+    # admit open-loop arrivals as struct-of-arrays InvocationBatch chunks
+    # (lazy Invocation materialization); False replays the object path —
+    # decisions and timings are identical either way (tests pin it)
+    columnar: bool = True
     drain_s: float = 120.0
     faults: Tuple[FaultEvent, ...] = ()
     slo_overrides: Dict[str, float] = field(default_factory=dict)
@@ -132,6 +136,11 @@ class Scenario:
     keepalive_w_per_replica: float = 0.0
     # background CPU load per platform (§5.1.2 interference knob)
     bg_cpu: Dict[str, float] = field(default_factory=dict)
+    # background MEMORY load per platform (Fig. 9's swap-cliff knob)
+    bg_mem: Dict[str, float] = field(default_factory=dict)
+    # (object key, destination store) pairs migrated before load starts —
+    # the §5.1.4 adaptive data-management move the fig11 arms A/B
+    migrate_objects: Tuple[Tuple[str, str], ...] = ()
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -185,6 +194,8 @@ def assemble(sc: Scenario):
         cp.create_platform(prof)
     for name, bg in sc.bg_cpu.items():
         cp.platforms[name].bg_cpu = float(bg)
+    for name, bg in sc.bg_mem.items():
+        cp.platforms[name].bg_mem = float(bg)
     fns = fn_mod.paper_functions(IMAGE_KEY, JSON_KEY)
     if sc.analytic:
         fns = {k: f.replace(real_fn=None) for k, f in fns.items()}
@@ -213,6 +224,8 @@ def assemble(sc: Scenario):
         cp.placement.set_bandwidth(name, REMOTE_STORE, REMOTE_BW)
     for a, b, bw in sc.bandwidths:
         cp.placement.set_bandwidth(a, b, float(bw))
+    for key, dest in sc.migrate_objects:
+        cp.placement.migrate(key, dest)
     cp.deploy(DeploymentSpec(sc.name, list(fns.values()),
                              list(sc.platforms)))
     if sc.autoscale is not None:
@@ -381,7 +394,7 @@ def run_scenario_state(sc: Scenario):
     times, fn_idx, names = mix.merge()
     specs = [fns[n] for n in names]
     schedule_arrival_mix(clock, submit_batch, specs, times, fn_idx,
-                         sc.batch_window_s, sink)
+                         sc.batch_window_s, sink, columnar=sc.columnar)
 
     t_end = max(sc.duration_s,
                 float(times[-1]) if times.size else 0.0,

@@ -129,6 +129,30 @@ def composite_decide(exec_s, data_s, p90_s, energy_j, alive, unloaded,
     return _masked_argmin(cost, feasible)
 
 
+@jax.jit
+def fused_composite_decide(ewma_v, ewma_n, analytic_s, resp_h2, resp_n,
+                           data_s, nodes, loaded_w, alive, unloaded,
+                           slo_s, energy_weight):
+    """The whole admission step in ONE jit: snapshot prediction columns
+    (exec EWMA-vs-analytic gate, P90 marker-vs-bootstrap gate, energy
+    from the platform power model) are built on-device from the raw
+    columnar estimator state (``FunctionPerformanceModel
+    .estimator_columns``), then the SLOComposite filter cascade + argmin
+    runs on them — no host-side prediction matrices at all.
+
+    Arithmetic mirrors ``predict_matrix`` + ``composite_decide`` op for
+    op (same operand association), so the only divergence from the NumPy
+    oracle is the float32 compute width — covered by the same
+    empirically-pinned near-tie caveat as the other cascades."""
+    exec_s = jnp.where(ewma_n >= 3, ewma_v, analytic_s)
+    p90_s = jnp.where(resp_n >= 10, resp_h2, exec_s * 1.5)
+    energy_j = (exec_s * nodes[None, :]) * loaded_w[None, :]
+    ok = _degrade(alive & unloaded[None, :], alive)
+    feasible = _degrade(ok & (p90_s <= slo_s[:, None]), ok)
+    cost = (exec_s + data_s) + energy_weight * energy_j
+    return _masked_argmin(cost, feasible)
+
+
 # ---------------------------------------------------------------------------
 # Pallas variant: fused filter cascade + argmin in one kernel
 # ---------------------------------------------------------------------------
@@ -199,3 +223,91 @@ def composite_decide_pallas(exec_s, data_s, p90_s, energy_j, alive,
                              jnp.asarray(p90_s), wenergy,
                              jnp.asarray(alive), jnp.asarray(unloaded),
                              jnp.asarray(slo_s), interpret=bool(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Fully-fused Pallas variant: estimator gates + prediction columns +
+# filter cascade + argmin in one VMEM-resident kernel
+# ---------------------------------------------------------------------------
+
+def _fused_composite_kernel(ewma_v_ref, ewma_n_ref, analytic_ref,
+                            resp_h2_ref, resp_n_ref, data_ref, nodes_ref,
+                            loadedw_ref, weight_ref, alive_ref,
+                            unloaded_ref, slo_ref, idx_ref, ok_ref):
+    exec_s = jnp.where(ewma_n_ref[...] >= 3, ewma_v_ref[...],
+                       analytic_ref[...])
+    p90 = jnp.where(resp_n_ref[...] >= 10, resp_h2_ref[...],
+                    exec_s * 1.5)
+    energy = (exec_s * nodes_ref[...]) * loadedw_ref[...]
+    alive = alive_ref[...] > 0
+    ok = alive & (unloaded_ref[...] > 0)
+    ok = jnp.where(ok.any(axis=1, keepdims=True), ok, alive)
+    feasible = ok & (p90 <= slo_ref[...])
+    feasible = jnp.where(feasible.any(axis=1, keepdims=True), feasible, ok)
+    cost = (exec_s + data_ref[...]) + weight_ref[...] * energy
+    masked = jnp.where(feasible, cost, jnp.inf)
+    row_min = masked.min(axis=1, keepdims=True)
+    ncols = masked.shape[1]
+    col = jax.lax.broadcasted_iota(_INT, masked.shape, 1)
+    first = jnp.where(masked == row_min, col, ncols).min(
+        axis=1, keepdims=True)
+    idx_ref[...] = jnp.broadcast_to(first, idx_ref.shape)
+    ok_ref[...] = jnp.broadcast_to(
+        jnp.isfinite(row_min).astype(_INT), ok_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_composite_pallas(ewma_v, ewma_n, analytic_s, resp_h2, resp_n,
+                            data_s, nodes, loaded_w, weight, alive,
+                            unloaded, slo_s, *, interpret: bool):
+    f, p = analytic_s.shape
+    fp = max(-(-f // 8) * 8, 8)           # sublane multiple
+    pp = max(-(-p // 128) * 128, 128)     # lane multiple
+    f32 = jnp.float32
+
+    def row(v, fill):                      # (P,) vector -> padded (F, P)
+        return _pad2(jnp.broadcast_to(v[None, :], (f, p)).astype(f32),
+                     fp, pp, fill)
+
+    args = (_pad2(ewma_v.astype(f32), fp, pp, 0.0),
+            _pad2(ewma_n.astype(_INT), fp, pp, 0),
+            _pad2(analytic_s.astype(f32), fp, pp, 0.0),
+            _pad2(resp_h2.astype(f32), fp, pp, 0.0),
+            _pad2(resp_n.astype(_INT), fp, pp, 0),
+            _pad2(data_s.astype(f32), fp, pp, 0.0),
+            row(nodes, 0.0), row(loaded_w, 0.0),
+            _pad2(jnp.full((f, p), weight, f32), fp, pp, 0.0),
+            _pad2(alive.astype(_INT), fp, pp, 0),
+            _pad2(jnp.broadcast_to(unloaded[None, :], (f, p)).astype(_INT),
+                  fp, pp, 0),
+            _pad2(jnp.broadcast_to(slo_s[:, None], (f, p)).astype(f32),
+                  fp, pp, -jnp.inf))
+    idx, ok = pl.pallas_call(
+        _fused_composite_kernel,
+        out_shape=(jax.ShapeDtypeStruct((fp, 128), _INT),
+                   jax.ShapeDtypeStruct((fp, 128), _INT)),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY
+                               if interpret else pltpu.VMEM)] * 12,
+        out_specs=(pl.BlockSpec(memory_space=pltpu.ANY
+                                if interpret else pltpu.VMEM),) * 2,
+        interpret=interpret,
+    )(*args)
+    return idx[:f, 0], ok[:f, 0] > 0
+
+
+def fused_composite_decide_pallas(ewma_v, ewma_n, analytic_s, resp_h2,
+                                  resp_n, data_s, nodes, loaded_w, alive,
+                                  unloaded, slo_s, energy_weight,
+                                  interpret=None):
+    """Pallas twin of ``fused_composite_decide``: raw estimator state in,
+    (choice, ok) out, one kernel.  Padding columns carry slo = -inf so a
+    padded platform can never look SLO-feasible."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _fused_composite_pallas(
+        jnp.asarray(ewma_v), jnp.asarray(ewma_n), jnp.asarray(analytic_s),
+        jnp.asarray(resp_h2), jnp.asarray(resp_n), jnp.asarray(data_s),
+        jnp.asarray(nodes), jnp.asarray(loaded_w),
+        jnp.float32(energy_weight), jnp.asarray(alive),
+        jnp.asarray(unloaded), jnp.asarray(slo_s),
+        interpret=bool(interpret))

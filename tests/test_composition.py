@@ -1,0 +1,57 @@
+"""Function composition (§6.3) + the InteractionModel's columnar batch
+fold — the surviving pieces of the retired tuning module, now living in
+``repro.core.behavioral``."""
+import numpy as np
+
+from repro.core.behavioral import (InteractionModel, compose_functions,
+                                   composition_plan)
+from repro.core.types import FunctionSpec, SLO
+
+
+def test_compose_functions_removes_internal_io():
+    a = FunctionSpec(name="a", flops=1e6, read_bytes=100.0,
+                     write_bytes=500.0, memory_mb=128, slo=SLO(5.0))
+    b = FunctionSpec(name="b", flops=2e6, read_bytes=500.0,
+                     write_bytes=50.0, memory_mb=256, slo=SLO(3.0))
+    c = compose_functions(a, b)
+    assert c.name == "a+b"
+    assert c.flops == 3e6
+    assert c.read_bytes == 100.0          # b's read of a's output is free
+    assert c.write_bytes == 50.0
+    assert c.memory_mb == 256
+    assert c.slo.p90_response_s == 3.0
+
+
+def test_compose_functions_chains_real_fns():
+    a = FunctionSpec(name="a", real_fn=lambda x: x + 1)
+    b = FunctionSpec(name="b", real_fn=lambda x: x * 10)
+    c = compose_functions(a, b)
+    assert c.real_fn(2) == 30
+
+
+def test_composition_plan_from_interaction_model():
+    im = InteractionModel(window_s=1.0)
+    t = 0.0
+    for _ in range(12):
+        im.record("a", t)
+        im.record("b", t + 0.1)
+        t += 10.0
+    fns = {"a": FunctionSpec(name="a"), "b": FunctionSpec(name="b")}
+    plan = composition_plan(im, fns, min_count=10)
+    assert [f.name for f in plan] == ["a+b"]
+
+
+def test_record_batch_columns_matches_sequential_edges():
+    rng = np.random.default_rng(7)
+    names = ["a", "b", "c", "d"]
+    seq = InteractionModel(window_s=1.0)
+    col = InteractionModel(window_s=1.0)
+    t = 0.0
+    for _ in range(20):
+        burst = rng.integers(0, len(names), size=int(rng.integers(1, 30)))
+        for i in burst:
+            seq.record(names[int(i)], t)
+        col.record_batch_columns(burst, names, t)
+        t += float(rng.uniform(0.0, 2.0))
+    assert dict(seq.edges) == dict(col.edges)
+    assert seq._last == col._last

@@ -1,0 +1,222 @@
+"""Struct-of-arrays admission (InvocationBatch): object/columnar parity.
+
+The columnar path must be observationally identical to submitting the
+materialized ``Invocation`` objects — same decisions, same queue timings,
+same rejections, same report bytes — while creating Python objects only
+for rows a replica actually starts (or a fault path touches).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import FDNControlPlane, Gateway, InvocationBatch
+from repro.core import profiles
+from repro.core.types import FunctionSpec, Invocation
+from repro.inspector import registry
+from repro.inspector.scenario import run_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # optional extra
+    HAVE_HYPOTHESIS = False
+
+
+def _specs(n=3):
+    return [FunctionSpec(name=f"f{i}", flops=1e6 * (i + 1),
+                         memory_mb=64 * (i + 1)) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Batch <-> object round trip
+# ---------------------------------------------------------------------------
+
+def test_from_invocations_round_trip_preserves_identity():
+    specs = _specs()
+    invs = [Invocation(specs[i % 3], 0.5 * i) for i in range(10)]
+    b = InvocationBatch.from_invocations(invs)
+    assert b.n == len(invs) == len(b)
+    assert [s.name for s in b.specs] == ["f0", "f1", "f2"]
+    assert b.to_invocations() == invs          # the very same objects
+    np.testing.assert_array_equal(b.fn_idx, np.arange(10) % 3)
+    np.testing.assert_array_equal(b.arrival_t, 0.5 * np.arange(10))
+
+
+def test_deadline_column_defaults_to_spec_slo():
+    specs = _specs()
+    b = InvocationBatch(specs, np.array([0, 2, 1]), np.zeros(3))
+    want = [specs[0].slo.p90_response_s, specs[2].slo.p90_response_s,
+            specs[1].slo.p90_response_s]
+    np.testing.assert_array_equal(b.deadline_s, want)
+
+
+def test_materialize_caches_one_object_per_row():
+    b = InvocationBatch(_specs(), np.array([1, 1]), np.array([3.0, 4.0]))
+    inv = b.materialize(0)
+    assert b.materialize(0) is inv
+    assert inv.fn.name == "f1" and inv.arrival_t == 3.0
+    assert len(b._objs) == 1                   # row 1 never materialized
+
+
+def test_view_is_zero_copy_and_state_writes_propagate():
+    b = InvocationBatch(_specs(), np.arange(6) % 3,
+                        np.linspace(0.0, 1.0, 6))
+    v = b.view(2, 5)
+    assert v.n == 3
+    assert v.fn_idx.base is b.fn_idx or \
+        v.fn_idx.base is b.fn_idx.base         # shares memory
+    v.state[:] = InvocationBatch.ADMITTED
+    assert list(b.state) == [0, 0, 1, 1, 1, 0]
+
+
+def test_present_fns_first_appearance_order():
+    b = InvocationBatch(_specs(), np.array([2, 0, 2, 1, 0]), np.zeros(5))
+    assert list(b.present_fns()) == [2, 0, 1]
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_round_trip_property():
+    specs = _specs()
+
+    @given(st.lists(st.tuples(st.integers(0, 2),
+                              st.floats(0.0, 1e4, allow_nan=False)),
+                    min_size=1, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def check(rows):
+        invs = [Invocation(specs[i], t) for i, t in rows]
+        b = InvocationBatch.from_invocations(invs)
+        out = b.to_invocations()
+        assert out == invs
+        # columnarize -> view -> re-materialize agrees row for row
+        lo, hi = 0, b.n
+        v = b.view(lo, hi)
+        for k in range(v.n):
+            inv = v.materialize(k)
+            assert inv.fn is specs[rows[k][0]]
+            assert inv.arrival_t == float(v.arrival_t[k])
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Control-plane parity
+# ---------------------------------------------------------------------------
+
+def _cp():
+    cp = FDNControlPlane()
+    # decision-row logging forces the object-path fallback by design;
+    # these tests exercise the columnar fast path (the production config)
+    cp.kb.log_decisions = False
+    for n in ("hpc-node-cluster", "edge-cluster"):
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    return cp
+
+
+def test_columnar_submit_matches_object_submit():
+    specs = _specs()
+    results = []
+    for columnar in (False, True):
+        cp = _cp()
+        for p in cp.platforms.values():
+            for s in specs:
+                p.deploy(s)
+        times = np.linspace(0.0, 1.0, 40)
+        fidx = np.arange(40) % 3
+        if columnar:
+            batch = InvocationBatch(specs, fidx, times)
+            accepted = cp.submit_batch(batch)
+            assert set(batch.state) == {InvocationBatch.ADMITTED}
+        else:
+            accepted = cp.submit_batch(
+                [Invocation(specs[i], float(t))
+                 for i, t in zip(fidx, times)])
+        cp.clock.run_until(120.0)
+        done = sorted((i.fn.name, round(i.arrival_t, 9), i.platform,
+                       round(i.end_t, 9), round(i.exec_time, 9))
+                      for i in cp.completed)
+        results.append((accepted, cp.completed_count,
+                        cp.kb.decision_count, done))
+    assert results[0] == results[1]
+
+
+def test_columnar_rejection_matches_object_path():
+    specs = [FunctionSpec(name="huge", memory_mb=1 << 30)]
+    outcomes = []
+    for columnar in (False, True):
+        cp = _cp()
+        for p in cp.platforms.values():
+            p.deploy(specs[0])
+        if columnar:
+            batch = InvocationBatch(specs, np.zeros(5, np.int32),
+                                    np.zeros(5))
+            accepted = cp.submit_batch(batch)
+            assert set(batch.state) == {InvocationBatch.REJECTED}
+        else:
+            accepted = cp.submit_batch(
+                [Invocation(specs[0], 0.0) for _ in range(5)])
+        outcomes.append((accepted, cp.rejected_count, len(cp.rejected),
+                         sorted(i.status for i in cp.rejected)))
+    assert outcomes[0] == outcomes[1]
+    assert outcomes[1][0] == 0 and outcomes[1][1] == 5
+
+
+def test_columnar_platform_failure_materializes_queued_rows():
+    cp = _cp()
+    fn = FunctionSpec(name="slow", flops=5e11)    # long-running: queues
+    for p in cp.platforms.values():
+        p.deploy(fn)
+    batch = InvocationBatch([fn], np.zeros(64, np.int32), np.zeros(64))
+    accepted = cp.submit_batch(batch)
+    assert accepted == 64
+    cp.clock.step()
+    failed_before = cp.rejected_count
+    for p in cp.platforms.values():
+        p.fail()
+    # every admitted row travelled the failure path as a real object
+    lost = [i for i in batch._objs.values() if i.status == "failed"]
+    assert len(lost) > 0
+    assert cp.redeliverer.redelivered >= 0       # redelivery saw objects
+    assert failed_before == 0
+
+
+def test_gateway_auth_failure_marks_batch_rejected():
+    cp = _cp()
+    gw = Gateway(cp)
+    specs = _specs(1)
+    for p in cp.platforms.values():
+        p.deploy(specs[0])
+    batch = InvocationBatch(specs, np.zeros(3, np.int32), np.zeros(3))
+    assert gw.request_batch(batch, token="wrong") == 0
+    assert gw.unauthorized == 3
+    assert set(batch.state) == {InvocationBatch.REJECTED}
+
+
+def test_gateway_lb_policy_falls_back_to_objects():
+    from repro.core.scheduler import RoundRobinCollaboration
+    cp = _cp()
+    gw = Gateway(cp, lb_policy=RoundRobinCollaboration())
+    specs = _specs(1)
+    for p in cp.platforms.values():
+        p.deploy(specs[0])
+    batch = InvocationBatch(specs, np.zeros(4, np.int32),
+                            np.linspace(0, 0.1, 4))
+    assert gw.request_batch(batch) == 4
+    cp.clock.run_until(60.0)
+    assert cp.completed_count == 4
+
+
+# ---------------------------------------------------------------------------
+# Whole-scenario report parity (the tentpole's oracle)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["smoke/tiny", "paper/fig10-weighted",
+                                  "chains/etl-pipeline"])
+def test_scenario_report_parity_columnar_vs_object(name):
+    sc = registry.get(name)
+    col = run_scenario(sc.replace(columnar=True)).to_dict()
+    obj = run_scenario(sc.replace(columnar=False)).to_dict()
+    col.pop("scenario")
+    obj.pop("scenario")
+    assert json.dumps(col, sort_keys=True) == json.dumps(obj,
+                                                         sort_keys=True)

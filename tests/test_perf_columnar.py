@@ -1,0 +1,152 @@
+"""Columnar performance-model state: the preallocated-array estimators
+must be bit-identical to the classic per-object P²/EWMA estimators, and
+``predict_matrix`` must equal the scalar ``predict_*`` loop element for
+element — the parity the fused admission step is built on."""
+import numpy as np
+import pytest
+
+from repro.core.behavioral import (EWMA, FunctionPerformanceModel,
+                                   P2Quantile)
+from repro.core.types import FunctionSpec, Invocation, PlatformProfile
+
+
+def _profiles(n=4):
+    return [PlatformProfile(name=f"p{i}", faas="openwhisk", nodes=i + 1,
+                            replica_flops=1e9 * (i + 1),
+                            net_bw=1e8 * (i + 1),
+                            loaded_w_per_node=10.0 + 3.0 * i)
+            for i in range(n)]
+
+
+def _functions(n=6):
+    return [FunctionSpec(name=f"f{i}", flops=1e6 * (i + 1),
+                         read_bytes=1e4 * i, write_bytes=5e3 * i)
+            for i in range(n)]
+
+
+def _observe(perf, fn, prof, exec_t, resp_t, cold=False, queue_t=0.0):
+    inv = Invocation(fn, 0.0)
+    inv.platform = prof.name
+    inv.exec_time = exec_t
+    inv.end_t = resp_t            # response_time = end_t - arrival_t
+    inv.cold_start = cold
+    inv.queue_time = queue_t
+    return perf.observe(inv)
+
+
+def _randomized(perf, fns, profs, seed=0, max_obs=25):
+    rng = np.random.default_rng(seed)
+    ref_ewma = {}
+    ref_resp = {}
+    for fn in fns:
+        for prof in profs:
+            k = int(rng.integers(0, max_obs))
+            e, p = EWMA(), P2Quantile()
+            for _ in range(k):
+                et = float(rng.uniform(0.01, 2.0))
+                rt = et * float(rng.uniform(1.0, 3.0))
+                _observe(perf, fn, prof, et, rt,
+                         cold=bool(rng.random() < 0.2),
+                         queue_t=float(rng.uniform(0.0, 0.5)))
+                e.add(et)
+                p.add(rt)
+            ref_ewma[(fn.name, prof.name)] = e
+            ref_resp[(fn.name, prof.name)] = p
+    return ref_ewma, ref_resp
+
+
+def test_cells_bitwise_match_reference_estimators():
+    perf = FunctionPerformanceModel()
+    fns, profs = _functions(), _profiles()
+    ref_ewma, ref_resp = _randomized(perf, fns, profs, seed=3)
+    for fn in fns:
+        for prof in profs:
+            key = (fn.name, prof.name)
+            e, p = ref_ewma[key], ref_resp[key]
+            cell = perf.exec_ewma.get(key)
+            if e.count == 0:
+                assert cell is None
+            else:
+                assert cell.count == e.count
+                assert cell.value() == e.value()
+            rcell = perf.resp_p90.get(key)
+            if p.count == 0:
+                assert rcell is None
+            else:
+                assert rcell.count == p.count
+                v, rv = p.value(), rcell.value()
+                assert v == rv or (np.isnan(v) and np.isnan(rv))
+
+
+def test_scalar_predicts_match_reference():
+    perf = FunctionPerformanceModel()
+    fns, profs = _functions(), _profiles()
+    ref_ewma, ref_resp = _randomized(perf, fns, profs, seed=11)
+    for fn in fns:
+        for prof in profs:
+            key = (fn.name, prof.name)
+            e, p = ref_ewma[key], ref_resp[key]
+            want = e.value() if e.count >= 3 else \
+                perf.analytic_exec(fn, prof)
+            assert perf.predict_exec(fn, prof) == want
+            wantp = p.value() if p.count >= 10 else want * 1.5
+            assert perf.predict_p90_response(fn, prof) == wantp
+            assert perf.predict_energy(fn, prof) == \
+                want * prof.nodes * prof.loaded_w_per_node
+
+
+def test_predict_matrix_bitwise_matches_scalar_loop():
+    perf = FunctionPerformanceModel()
+    fns, profs = _functions(), _profiles()
+    _randomized(perf, fns, profs, seed=42)
+    # include a function and platform the model has never seen
+    fns = fns + [FunctionSpec(name="unseen", flops=3e7, read_bytes=1e5)]
+    profs = profs + [PlatformProfile(name="fresh", faas="gcf", nodes=2)]
+    m = perf.predict_matrix(fns, profs, p90=True, energy=True)
+    for i, fn in enumerate(fns):
+        for j, prof in enumerate(profs):
+            assert m["exec_s"][i, j] == perf.predict_exec(fn, prof)
+            assert m["p90_s"][i, j] == perf.predict_p90_response(fn, prof)
+            assert m["energy_j"][i, j] == perf.predict_energy(fn, prof)
+
+
+def test_state_grows_past_preallocation():
+    perf = FunctionPerformanceModel()
+    profs = [PlatformProfile(name=f"plat{i}", faas="openwhisk")
+             for i in range(20)]
+    fns = [FunctionSpec(name=f"fn{i}") for i in range(80)]
+    for i, fn in enumerate(fns):
+        prof = profs[i % len(profs)]
+        for k in range(3):
+            _observe(perf, fn, prof, 0.1 * (i + 1), 0.2 * (i + 1))
+    assert perf._state.exec_n.shape[0] >= 80
+    assert perf._state.exec_n.shape[1] >= 20
+    for i, fn in enumerate(fns):
+        prof = profs[i % len(profs)]
+        assert perf.exec_ewma.get((fn.name, prof.name)).count == 3
+        assert perf.predict_exec(fn, prof) == pytest.approx(0.1 * (i + 1))
+
+
+def test_cold_start_ewma_tracked_per_platform():
+    perf = FunctionPerformanceModel()
+    fn, prof = _functions(1)[0], _profiles(1)[0]
+    ref = EWMA()
+    for q in (1.5, 2.5, 0.5):
+        _observe(perf, fn, prof, 0.1, 0.2, cold=True, queue_t=q)
+        ref.add(q)
+    assert perf.predict_cold(prof.name) == ref.value()
+    assert np.isnan(perf.predict_cold("never-seen"))
+
+
+def test_fold_observations_closed_form_ewma():
+    perf = FunctionPerformanceModel()
+    fn, prof = _functions(1)[0], _profiles(1)[0]
+    _observe(perf, fn, prof, 0.4, 0.6)
+    perf.fold_observations(fn.name, prof.name, 0.2, 0.3, k=50)
+    cell = perf.exec_ewma.get((fn.name, prof.name))
+    assert cell.count == 51
+    # closed form: v' = x + (1-a)^k (v0 - x)
+    want = 0.2 + (1 - perf.ALPHA) ** 50 * (0.4 - 0.2)
+    assert cell.value() == pytest.approx(want, rel=1e-12)
+    # folded population counts toward the P90 observation gates
+    assert perf.resp_p90.get((fn.name, prof.name)).count == 51

@@ -1,11 +1,11 @@
-"""Recommendation & Visualization (§3.6) + bursty workload generator."""
+"""Deployment recommendation (§3.6, now a performance-model method) +
+bursty workload generator."""
 import numpy as np
 
 from repro.core import FDNControlPlane, Gateway
 from repro.core import functions as fn_mod
 from repro.core import profiles
 from repro.core.loadgen import attach_completion_hooks, run_load
-from repro.core.recommend import Recommender
 from repro.core.types import DeploymentSpec
 
 
@@ -25,32 +25,32 @@ def _loaded_cp():
 
 def test_recommend_tradeoff_and_history():
     cp, fns = _loaded_cp()
-    rec = Recommender(cp.kb, cp.perf, cp.metrics)
     profs = [p.prof for p in cp.platforms.values()]
-    advice = rec.recommend(fns["JSON-loads"], profs)
+    advice = cp.perf.recommend(fns["JSON-loads"], profs, kb=cp.kb)
     assert advice["latency_best"] == "hpc-node-cluster"
     assert advice["energy_best"] == "edge-cluster"
     assert advice["tradeoff"] is True
-    advice2 = rec.recommend(fns["nodeinfo"], profs)
+    advice2 = cp.perf.recommend(fns["nodeinfo"], profs, kb=cp.kb)
     assert advice2["historical"] in cp.platforms
 
 
 def test_recommend_rejects_nonfitting():
     cp, fns = _loaded_cp()
-    rec = Recommender(cp.kb, cp.perf, cp.metrics)
     big = fns["nodeinfo"].replace(name="huge", memory_mb=1 << 30)
-    advice = rec.recommend(big, [p.prof for p in cp.platforms.values()])
+    advice = cp.perf.recommend(big,
+                               [p.prof for p in cp.platforms.values()])
     assert advice.get("error") == "fits nowhere"
 
 
-def test_explain_decisions_renders_markdown():
+def test_recommend_matches_scalar_predictions():
     cp, fns = _loaded_cp()
-    rec = Recommender(cp.kb, cp.perf, cp.metrics)
-    md = rec.explain_decisions()
-    assert "| function | platform | share |" in md
-    assert "nodeinfo" in md
-    report = rec.platform_report(list(cp.platforms))
-    assert "served=" in report
+    profs = [p.prof for p in cp.platforms.values()]
+    advice = cp.perf.recommend(fns["nodeinfo"], profs)
+    for p in profs:
+        assert advice["predicted_exec_s"][p.name] == \
+            round(cp.perf.predict_exec(fns["nodeinfo"], p), 4)
+        assert advice["predicted_energy_j"][p.name] == \
+            round(cp.perf.predict_energy(fns["nodeinfo"], p), 3)
 
 
 def test_bursty_arrivals_shape():

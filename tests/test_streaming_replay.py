@@ -1,0 +1,99 @@
+"""Chunked streaming replay: conservation, determinism, columnar-sink
+folds, and the trace-chunk equivalence with ``counts_to_arrivals``."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import SLOCompositePolicy
+from repro.inspector.streaming import chunk_batch, stream_replay
+from repro.inspector.traces import counts_to_arrivals, synthetic_azure_counts
+
+from benchmarks.fdn_common import build_fdn
+
+FNS = ("nodeinfo", "primes-python", "JSON-loads")
+
+
+def _replay(chunk_minutes=7, seed=3, policy=None, minutes=30, mean_rpm=40.0):
+    cp, _gw, fns = build_fdn(analytic=True)
+    cp.kb.log_decisions = False
+    if policy is not None:
+        cp.policy = policy(cp.perf, cp.placement)
+    counts = synthetic_azure_counts(FNS, minutes=minutes,
+                                    mean_rpm=mean_rpm, seed=seed)
+    stats = stream_replay(cp, fns, counts, chunk_minutes=chunk_minutes,
+                          seed=seed)
+    return cp, counts, stats
+
+
+def test_every_arrival_is_decided():
+    _cp, counts, stats = _replay()
+    total = sum(int(c.sum()) for c in counts.values())
+    assert stats.submitted == total
+    assert stats.admitted + stats.rejected == stats.submitted
+    assert sum(stats.per_platform.values()) == stats.admitted
+    assert sum(stats.per_function.values()) == stats.admitted
+
+
+def test_replay_is_deterministic():
+    _, _, a = _replay(chunk_minutes=7, seed=11)
+    _, _, b = _replay(chunk_minutes=7, seed=11)
+    assert a.to_dict() == b.to_dict()
+
+
+def test_chunk_size_does_not_change_totals():
+    _, _, a = _replay(chunk_minutes=1)
+    _, _, b = _replay(chunk_minutes=30)
+    assert a.submitted == b.submitted
+    assert b.chunks == 1 and a.chunks > 1
+    assert a.peak_chunk_rows <= b.peak_chunk_rows
+
+
+def test_columnar_sink_absorbs_folded_population():
+    cp, _counts, stats = _replay()
+    folded = 0
+    for name in FNS:
+        fi = cp.perf._frow.get(name)
+        if fi is not None:
+            folded += int(cp.perf._state.exec_n[fi, :].sum())
+    assert folded == stats.admitted
+    # arrival-rate windows and co-invocation edges saw the stream too
+    assert any(cp.events.forecast_rate(name) > 0 for name in FNS)
+    assert cp.interactions.edges
+
+
+def test_chunk_batch_matches_counts_to_arrivals_single_fn():
+    """One function's chunk columns are byte-identical to the trace
+    library's canonical minute-count expansion under the same seed."""
+    cp, _gw, fns = build_fdn(analytic=True)
+    counts = np.array([3, 0, 5, 2])
+    batch = chunk_batch([fns["nodeinfo"]], counts[None, :], 0, 60.0, seed=9)
+    expect = counts_to_arrivals(counts, minute_s=60.0, seed=9)
+    assert batch.n == int(counts.sum())
+    np.testing.assert_array_equal(batch.arrival_t, expect)
+    assert set(batch.fn_idx.tolist()) == {0}
+
+
+class _StatefulPolicy(SLOCompositePolicy):
+    def fn_decisions(self, fns, snap, n=None):
+        return None                       # force the representative path
+
+
+def test_stateful_policy_uses_representative_rows():
+    _cp, counts, stats = _replay(policy=_StatefulPolicy)
+    total = sum(int(c.sum()) for c in counts.values())
+    assert stats.submitted == total
+    assert stats.admitted + stats.rejected == total
+
+
+def test_empty_minutes_are_skipped():
+    cp, _gw, fns = build_fdn(analytic=True)
+    counts = {"nodeinfo": np.zeros(10)}
+    stats = stream_replay(cp, fns, counts, chunk_minutes=4)
+    assert stats.submitted == 0 and stats.chunks == 0
+
+
+def test_replay_stays_object_free():
+    """No Invocation objects may be born during a columnar replay."""
+    cp, _counts, stats = _replay()
+    assert stats.admitted > 0
+    assert cp.completed_count == 0
+    assert all(not p.inflight for p in cp.platforms.values())
