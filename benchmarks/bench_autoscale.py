@@ -182,7 +182,8 @@ def check_floor(results: Dict, floor_path: str,
 
 def main(argv: List[str]) -> int:
     smoke = "--smoke" in argv
-    json_path = floor_path = None
+    floor_path = None
+    json_path = "BENCH_autoscale.json"   # always emitted; --json overrides
     if "--json" in argv:
         json_path = argv[argv.index("--json") + 1]
     if "--check-floor" in argv:
@@ -191,10 +192,9 @@ def main(argv: List[str]) -> int:
     rows, failures = run_bench(smoke=smoke, results_out=results)
     if floor_path is not None:
         check_floor(results, floor_path, failures)
-    if json_path is not None:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-            f.write("\n")
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
     for r in rows:
         print(r.csv())
     print("failures:", failures or "none")

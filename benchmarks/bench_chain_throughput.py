@@ -19,9 +19,10 @@ JSON across runs).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from benchmarks.fdn_common import Row, build_fdn, check
 from repro.chains import DataGravityPlanner, catalog
@@ -79,7 +80,9 @@ def _run_ab(smoke: bool):
     return fast, slow
 
 
-def run_bench(smoke: bool = False) -> Tuple[List[Row], List[str]]:
+def run_bench(smoke: bool = False,
+              results_out: Optional[Dict] = None
+              ) -> Tuple[List[Row], List[str]]:
     rows: List[Row] = []
     failures: List[str] = []
 
@@ -116,12 +119,34 @@ def run_bench(smoke: bool = False) -> Tuple[List[Row], List[str]]:
           "slow WAN: forced co-location should beat the gravity-blind "
           f"split on chain p90 (split={s_split:.3f} vs "
           f"coloc={s_coloc:.3f})", failures)
+
+    if results_out is not None:
+        results_out.update({
+            "smoke": smoke, "plans": n, "stages": stages,
+            "stages_per_s": {
+                "fresh_snapshot": round(fresh, 1),
+                "shared_snapshot": round(shared, 1),
+            },
+            "ab": {
+                "fast_wan": {"split_p90_s": f_split,
+                             "colocate_p90_s": f_coloc},
+                "slow_wan": {"split_p90_s": s_split,
+                             "colocate_p90_s": s_coloc},
+            },
+        })
     return rows, failures
 
 
 def main(argv: List[str]) -> int:
     smoke = "--smoke" in argv
-    rows, failures = run_bench(smoke=smoke)
+    json_path = "BENCH_chain.json"       # always emitted; --json overrides
+    if "--json" in argv:
+        json_path = argv[argv.index("--json") + 1]
+    results: Dict = {}
+    rows, failures = run_bench(smoke=smoke, results_out=results)
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
     for r in rows:
         print(r.csv())
     print("failures:", failures or "none")

@@ -19,9 +19,10 @@ aggregates (count / total / p90) agree across backends.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
-from typing import List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -53,7 +54,9 @@ def _synthetic_completions(n: int):
     return sink, end, end - arrival
 
 
-def run_bench(smoke: bool = False) -> Tuple[List[Row], List[str]]:
+def run_bench(smoke: bool = False,
+              results_out: Optional[Dict] = None
+              ) -> Tuple[List[Row], List[str]]:
     n = SMOKE_N if smoke else FULL_N
     rows: List[Row] = []
     failures: List[str] = []
@@ -145,12 +148,33 @@ def run_bench(smoke: bool = False) -> Tuple[List[Row], List[str]]:
     check(speedup >= target,
           f"record_completions should be >= {target:.0f}x the per-sample "
           f"record_completion baseline (got {speedup:.1f}x)", failures)
+
+    if results_out is not None:
+        results_out.update({
+            "n": n, "smoke": smoke,
+            "samples_per_s": {
+                "per_sample_add": round(base_rate, 1),
+                "columnar_add_many": round(col_rate, 1),
+            },
+            "completions_per_s": {
+                "record_completion_seq": round(seq_rate, 1),
+                "record_completions": round(bulk_rate, 1),
+            },
+            "speedup_bulk_vs_seq": round(speedup, 2),
+        })
     return rows, failures
 
 
 def main(argv: List[str]) -> int:
     smoke = "--smoke" in argv
-    rows, failures = run_bench(smoke=smoke)
+    json_path = "BENCH_metrics.json"     # always emitted; --json overrides
+    if "--json" in argv:
+        json_path = argv[argv.index("--json") + 1]
+    results: Dict = {}
+    rows, failures = run_bench(smoke=smoke, results_out=results)
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
     for r in rows:
         print(r.csv())
     print("failures:", failures or "none")

@@ -26,7 +26,10 @@ paths on the five Table-3 platforms with the production
     arrivals live as NumPy columns end to end, ``submit_batch`` takes
     zero-copy chunk views of one preallocated stream, and ``Invocation``
     objects materialize lazily only when a replica starts a row (the
-    streaming-replay configuration: no KB decision rows).
+    streaming-replay configuration: no KB decision rows);
+  * ``columnar_traced`` — the columnar arm with the flight recorder
+    attached at 1/16 head-based sampling (repro.obs): the tracing-
+    overhead gate, pinned <= 15% below the untraced columnar rate.
 
 No simulated time elapses while submitting, so all arms schedule against
 identical platform-state snapshots at t=0 and the measurement isolates
@@ -39,8 +42,8 @@ the admission engine.  Claims checked:
     acceptance pin: the next jump past the PR-4 729k/s floor);
   * jax and NumPy score backends pick identical platforms.
 
-``--json PATH`` writes the measurements (CI stores it as the
-``BENCH_sched.json`` artifact); ``--check-floor FLOOR.json`` fails when
+Measurements always land in ``BENCH_sched.json`` (``--json PATH``
+overrides the location; CI uploads it); ``--check-floor FLOOR.json`` fails when
 any pinned metric drops more than 30% below its floor
 (``benchmarks/perf_floor.json`` — re-bless it alongside intentional
 hot-path changes).
@@ -119,7 +122,11 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         _seed_observations(cp, fns)
     elif kind == "columnar":
         cp.kb.log_decisions = False
-    if kind == "columnar":
+    elif kind == "columnar_traced":
+        from repro.obs import FlightRecorder
+        cp.kb.log_decisions = False
+        cp.attach_recorder(FlightRecorder(sample=1.0 / 16))
+    if kind in ("columnar", "columnar_traced"):
         stream = _make_stream(fns, n)
     else:
         invs = _make_invs(fns, n)
@@ -136,7 +143,7 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(invs[lo:lo + BATCH])
-    elif kind == "columnar":
+    elif kind in ("columnar", "columnar_traced"):
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(stream.view(lo,
@@ -232,8 +239,8 @@ def run_bench(smoke: bool = False,
     rates: Dict[str, float] = {}
     reps = 2 if smoke else 3                   # best-of: tame CI jitter
     for kind, kn in (("per_invocation", n), ("batched", n),
-                     ("columnar", n), ("pr1_hedged", hedge_n),
-                     ("jit_hedged", hedge_n)):
+                     ("columnar", n), ("columnar_traced", n),
+                     ("pr1_hedged", hedge_n), ("jit_hedged", hedge_n)):
         dt = float("inf")
         for _ in range(reps):
             rep_dt, acc, kn = _run_arm(kind, kn)
@@ -248,10 +255,12 @@ def run_bench(smoke: bool = False,
     speedup = rates["batched"] / max(rates["per_invocation"], 1e-9)
     hedged_speedup = rates["jit_hedged"] / max(rates["pr1_hedged"], 1e-9)
     columnar_speedup = rates["columnar"] / max(rates["batched"], 1e-9)
+    traced_frac = rates["columnar_traced"] / max(rates["columnar"], 1e-9)
     rows.append(Row("sched_throughput/speedups", 0.0,
                     f"batched_vs_per_invocation={speedup:.1f}x;"
                     f"jit_hedged_vs_pr1_hedged={hedged_speedup:.1f}x;"
                     f"columnar_vs_batched={columnar_speedup:.1f}x;"
+                    f"traced_vs_columnar={traced_frac:.2f}x;"
                     f"batch={BATCH}"))
 
     target = 3.0 if smoke else 10.0
@@ -264,6 +273,9 @@ def run_bench(smoke: bool = False,
     check(columnar_speedup >= 2.0,
           "struct-of-arrays admission should be >= 2x the object-list "
           f"batched path (got {columnar_speedup:.1f}x)", failures)
+    check(traced_frac >= 0.85,
+          "sampled tracing (1/16) should cost <= 15% of the columnar "
+          f"admission rate (got {traced_frac:.2f}x)", failures)
     _check_backend_parity(failures)
 
     if results_out is not None:
@@ -274,7 +286,9 @@ def run_bench(smoke: bool = False,
                          "jit_hedged_vs_pr1_hedged":
                          round(hedged_speedup, 2),
                          "columnar_vs_batched":
-                         round(columnar_speedup, 2)},
+                         round(columnar_speedup, 2),
+                         "traced_vs_columnar": round(traced_frac, 3)},
+            "tracing_overhead_pct": round((1.0 - traced_frac) * 100.0, 1),
             "planned_stages_per_s":
             round(_planned_stages_per_s(smoke), 1),
         })
@@ -283,7 +297,8 @@ def run_bench(smoke: bool = False,
 
 def main(argv: List[str]) -> int:
     smoke = "--smoke" in argv
-    json_path = floor_path = None
+    floor_path = None
+    json_path = "BENCH_sched.json"       # always emitted; --json overrides
     if "--json" in argv:
         json_path = argv[argv.index("--json") + 1]
     if "--check-floor" in argv:

@@ -112,7 +112,7 @@ def run_bench(smoke: bool = False,
 def main(argv: List[str]) -> int:
     smoke = "--smoke" in argv
     rss_limit = DEFAULT_RSS_LIMIT_MB
-    json_path = None
+    json_path = "BENCH_replay.json"      # always emitted; --json overrides
     if "--rss-limit-mb" in argv:
         rss_limit = float(argv[argv.index("--rss-limit-mb") + 1])
     if "--json" in argv:
@@ -120,10 +120,9 @@ def main(argv: List[str]) -> int:
     results: Dict = {}
     rows, failures = run_bench(smoke=smoke, rss_limit_mb=rss_limit,
                                results_out=results)
-    if json_path is not None:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2, sort_keys=True)
-            f.write("\n")
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
     for r in rows:
         print(r.csv())
     print("failures:", failures or "none")

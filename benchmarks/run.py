@@ -58,6 +58,41 @@ def scenario_diff_main(args) -> int:
     return diff_main(args)
 
 
+def trace_main(args) -> int:
+    """``python benchmarks/run.py trace <scenario> [--out PATH]
+    [--sample S]``: run a registered scenario with the flight recorder
+    attached, write a Chrome trace-event JSON (load it in Perfetto /
+    chrome://tracing) and print the latency_breakdown section."""
+    from repro.inspector import registry
+    from repro.inspector.scenario import run_scenario_state
+    from repro.obs import write_chrome_trace
+    usage = "usage: trace <scenario> [--out PATH] [--sample S]"
+    out_path, sample = None, 1.0
+    names = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--out":
+            i += 1
+            out_path = args[i]
+        elif args[i] == "--sample":
+            i += 1
+            sample = float(args[i])
+        else:
+            names.append(args[i])
+        i += 1
+    if len(names) != 1:
+        print(usage)
+        return 1
+    sc = registry.get(names[0]).replace(trace=True, trace_sample=sample)
+    report, cp, _sink = run_scenario_state(sc)
+    if out_path is None:
+        out_path = "trace_" + names[0].replace("/", "_") + ".json"
+    n_events = write_chrome_trace(cp.recorder, out_path)
+    print(f"# {n_events} trace events -> {out_path}")
+    print(json.dumps(report.latency_breakdown, indent=2, sort_keys=True))
+    return 0
+
+
 def _summarize_json(path: str, kind: str):
     if not os.path.exists(path):
         print(f"# {kind}: {path} not found — run the generator first")
@@ -87,6 +122,8 @@ def main() -> int:
         return scenario_main(sys.argv[2:])
     if len(sys.argv) > 1 and sys.argv[1] == "scenario-diff":
         return scenario_diff_main(sys.argv[2:])
+    if len(sys.argv) > 1 and sys.argv[1] == "trace":
+        return trace_main(sys.argv[2:])
     t0 = time.time()
     all_failures = []
     print("name,us_per_call,derived")

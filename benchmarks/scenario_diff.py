@@ -13,6 +13,12 @@ Exit status: 0 when every compared metric is within tolerance, 1 on any
 drift (missing metrics count as drift).  NaN-vs-NaN compares equal (empty
 percentile slots).  Non-numeric leaves (placement maps, modes, names)
 must match exactly.
+
+One asymmetry: a whole report *section* present in the new report but
+absent from the golden is a warning, not drift — newer code grows report
+sections (e.g. ``latency_breakdown``) before the goldens are re-blessed,
+and that must not fail every open PR.  A section the golden has but the
+new report dropped is still drift.
 """
 from __future__ import annotations
 
@@ -47,7 +53,8 @@ DEFAULT_TOLERANCES: Dict[str, float] = {
 # the scenario spec echo is configuration, not measurement: only the name
 # participates in the diff (comparing reports of two different scenarios
 # is almost certainly an operator error)
-SECTIONS = ("totals", "per_platform", "per_function", "per_chain")
+SECTIONS = ("totals", "per_platform", "per_function", "per_chain",
+            "latency_breakdown")
 
 
 class Drift:
@@ -116,8 +123,13 @@ def _compare_tree(path: str, key: str, a: Any, b: Any,
 
 
 def diff_reports(a: Dict[str, Any], b: Dict[str, Any],
-                 tolerances: Dict[str, float] = None) -> List[Drift]:
-    """All out-of-tolerance metrics between two report dicts."""
+                 tolerances: Dict[str, float] = None,
+                 warnings: List[str] = None) -> List[Drift]:
+    """All out-of-tolerance metrics between two report dicts.
+
+    ``a`` is the fresh report, ``b`` the golden.  A section only ``a``
+    has is appended to ``warnings`` (when given) instead of drifting —
+    see the module docstring."""
     tolerances = {**DEFAULT_TOLERANCES, **(tolerances or {})}
     out: List[Drift] = []
     _compare_leaf("schema_version", "schema_version",
@@ -131,6 +143,12 @@ def diff_reports(a: Dict[str, Any], b: Dict[str, Any],
     for section in SECTIONS:
         sa, sb = a.get(section), b.get(section)
         if sa is None and sb is None:
+            continue
+        if section in a and section not in b:
+            if warnings is not None:
+                warnings.append(
+                    f"section {section!r} is new (absent from the golden)"
+                    " — tolerated; re-bless the golden to start gating it")
             continue
         _compare_tree(section, section, sa or {}, sb or {},
                       tolerances, out)
@@ -171,7 +189,10 @@ def main(argv: List[str]) -> int:
         a = json.load(f)
     with open(path_b) as f:
         b = json.load(f)
-    drifts = diff_reports(a, b, tolerances)
+    warnings: List[str] = []
+    drifts = diff_reports(a, b, tolerances, warnings=warnings)
+    for w in warnings:
+        print(f"WARN {w}")
     for d in drifts:
         print(d)
     n = sum(1 for sec in SECTIONS for _ in (a.get(sec) or {}))

@@ -63,6 +63,9 @@ class WarmPoolController:
         self.ticks = 0
         self.prewarmed = 0
         self.retired = 0
+        # flight recorder (repro.obs); set by the control plane's
+        # attach_recorder / attach_autoscaler
+        self.recorder = None
         self._plats: List[_PlatformRows] = []
         self._by_name: Dict[str, _PlatformRows] = {}
         self._rows = 0
@@ -197,10 +200,14 @@ class WarmPoolController:
         np.subtract(desired, idle, out=need)
         # grow pools below target ...
         if need.max() > 0.0:
+            rec = self.recorder
             for r in np.flatnonzero(need > 0.0):
                 n = int(need[r])
                 self._row_platform[r].prewarm(self._row_fn[r].name, n)
                 self.prewarmed += n
+                if rec is not None:
+                    rec.record_prewarm(self._row_platform[r].prof.name,
+                                       self._row_fn[r].name, now, n)
         # ... and TTL-sweep pools above it, but only rows whose earliest
         # possible expiry has arrived (enforce_keepalive hands back the
         # next due time, so quiet pools are not re-scanned every tick)
@@ -216,12 +223,16 @@ class WarmPoolController:
         next_sweep = self._next_sweep
         np.less(self._need, 0.0, out=self._sweep_mask)
         due = self._sweep_mask & (next_sweep <= now)
+        rec = self.recorder
         for r in np.flatnonzero(due):
             n, nxt = self._row_platform[r].enforce_keepalive(
                 self._row_fn[r].name, float(ttl_s[r]),
                 keep=int(desired[r]))
             self.retired += n
             next_sweep[r] = nxt
+            if n and rec is not None:
+                rec.record_retire(self._row_platform[r].prof.name,
+                                  self._row_fn[r].name, now, n)
         pending = next_sweep[self._sweep_mask]
         self._sweep_due = float(pending.min()) if pending.size \
             else float("inf")

@@ -30,7 +30,7 @@ class ChainInstance:
 
     __slots__ = ("id", "label", "chain", "plan", "t0", "end_t", "status",
                  "remaining", "outstanding", "stages_done", "bytes_moved",
-                 "transfer_s")
+                 "transfer_s", "stage_ready")
 
     def __init__(self, iid: int, label: str, chain: Chain, plan: ChainPlan,
                  t0: float):
@@ -48,6 +48,9 @@ class ChainInstance:
         self.stages_done = 0
         self.bytes_moved = 0.0
         self.transfer_s = 0.0
+        # stage -> ready instant; only filled when a flight recorder is
+        # attached (the chain-stage spans' t0)
+        self.stage_ready: Dict[str, float] = {}
 
     @property
     def latency(self) -> Optional[float]:
@@ -152,6 +155,8 @@ class ChainExecutor:
     def _enqueue_stage(self, inst: ChainInstance, stage: Stage):
         pname = inst.plan.assignment[stage.name]
         inst.outstanding[stage.name] = stage.fan_out
+        if self.cp.recorder is not None:
+            inst.stage_ready[stage.name] = self.clock.now()
         if self.proactive_staging:
             # overlap successors' external pulls with this stage's run;
             # the replication is still a real transfer, so its bytes and
@@ -326,6 +331,12 @@ class ChainExecutor:
             for e in inst.chain.out_edges(stage.name):
                 stores[loc].put(self.instance_key(inst, e), e.size_bytes)
         inst.stages_done += 1
+        rec = self.cp.recorder
+        if rec is not None:
+            rec.record_chain_stage(
+                inst.id, inv.id, stage.function, inv.platform,
+                inst.stage_ready.get(stage.name, inst.t0),
+                self.clock.now())
         for succ in inst.chain.succs(stage.name):
             inst.remaining[succ] -= 1
             if inst.remaining[succ] == 0:

@@ -69,6 +69,10 @@ class FDNControlPlane:
         # attach_autoscaler — platforms then manage their own keep-alive
         # via the legacy faas-idler
         self.autoscaler = None
+        # flight recorder (repro.obs); None until attach_recorder — every
+        # tap in the admission paths guards on it with one check per burst
+        self.recorder = None
+        self._hedge_tap = False
         # retain_completions=False drops the per-invocation completed and
         # rejected lists (open-loop sinks own the samples; 10^6-invocation
         # scenarios must not retain a million Invocation objects here)
@@ -99,6 +103,7 @@ class FDNControlPlane:
             self.placement.add_store(name)
         platform.on_complete.append(self._on_complete)
         platform.on_fail.append(self._on_fail)
+        platform.recorder = self.recorder
         self.detector.heartbeat(name)
         self._schedule_heartbeat(platform)
         if self.autoscaler is not None:
@@ -162,13 +167,19 @@ class FDNControlPlane:
             target = self.platforms.get(platform_override)
         else:
             target = self.policy.choose(inv, self.alive_platforms())
+        rec = self.recorder
         if target is None:
             inv.status = "failed"
             self._reject(inv)
+            if rec is not None:
+                rec.record_reject(inv.fn.name, None, self.clock.now(), 1)
             return False
         self.kb.record_decision(
             self.clock.now(), inv.fn.name, target.prof.name,
             self.policy.name, self.perf.predict_exec(inv.fn, target.prof))
+        if rec is not None:
+            rec.record_admit(inv.fn.name, target.prof.name,
+                             self.clock.now(), 1)
         self.sidecars[target.prof.name].admit(inv)
         if self.hedge.enabled:
             alternates = [p for p in self.alive_platforms()
@@ -271,6 +282,7 @@ class FDNControlPlane:
                         for g, (fn, idxs) in enumerate(groups)]
 
         accepted = 0
+        rec = self.recorder
         pname_groups: Dict[str, List[Invocation]] = {}
         # (target, members) per (fn, platform) — ONE hedge timer each
         hedge_groups: List[Tuple[TargetPlatform, List[Invocation]]] = []
@@ -286,8 +298,13 @@ class FDNControlPlane:
                         inv = invs[i]
                         inv.status = "failed"
                         self._reject(inv)
+                    if rec is not None:
+                        rec.record_reject(fn.name, None, now, len(idxs))
                     continue
                 members = [invs[i] for i in idxs]
+                if rec is not None:
+                    rec.record_admit(fn.name, target.prof.name, now,
+                                     len(members))
                 if want_hedges:
                     hedge_groups.append((target, members))
                 pname = target.prof.name
@@ -315,12 +332,18 @@ class FDNControlPlane:
             policy_name = self.policy.name
             hgroups: Dict[Tuple[int, str],
                           Tuple[TargetPlatform, List[Invocation]]] = {}
+            admit_counts: Dict[Tuple[str, str], int] = {}
             for inv, target in zip(invs, targets):
                 if target is None:
                     inv.status = "failed"
                     self._reject(inv)
+                    if rec is not None:
+                        rec.record_reject(inv.fn.name, None, now, 1)
                     continue
                 pname = target.prof.name
+                if rec is not None:
+                    akey = (inv.fn.name, pname)
+                    admit_counts[akey] = admit_counts.get(akey, 0) + 1
                 if log_decisions:
                     key = (inv.fn.name, pname)
                     pred = pred_cache.get(key)
@@ -347,6 +370,9 @@ class FDNControlPlane:
                 self.kb.record_decisions(rows)
             else:
                 self.kb.count_decisions(accepted)
+            if rec is not None:
+                for (fname, pname), c in admit_counts.items():
+                    rec.record_admit(fname, pname, now, c)
             hedge_groups.extend(hgroups.values())
 
         for pname, group in pname_groups.items():
@@ -421,6 +447,7 @@ class FDNControlPlane:
                     for g in range(len(present))]
 
         accepted = 0
+        rec = self.recorder
         pname_groups: Dict[str, List[np.ndarray]] = {}
         for g, j in enumerate(present):
             target = tmap[g]
@@ -433,8 +460,14 @@ class FDNControlPlane:
                         inv = batch.materialize(int(i))
                         inv.status = "failed"
                         self.rejected.append(inv)
+                if rec is not None:
+                    rec.record_reject(pres_specs[g].name, None, now,
+                                      int(idxs.size))
                 continue
             batch.state[idxs] = InvocationBatch.ADMITTED
+            if rec is not None:
+                rec.record_admit(pres_specs[g].name, target.prof.name,
+                                 now, int(idxs.size))
             group = pname_groups.get(target.prof.name)
             if group is None:
                 pname_groups[target.prof.name] = [idxs]
@@ -483,7 +516,12 @@ class FDNControlPlane:
         want = int(rate * w) + 1
         have = target.replica_count(fn.name)
         if want > have:
-            target.prewarm(fn.name, min(want - have, 8))
+            n = min(want - have, 8)
+            target.prewarm(fn.name, n)
+            rec = self.recorder
+            if rec is not None:
+                rec.record_prewarm(target.prof.name, fn.name,
+                                   self.clock.now(), n)
 
     # -------------------------------------------------------- autoscale ---
     def attach_autoscaler(self, policy: str = "predictive",
@@ -502,9 +540,31 @@ class FDNControlPlane:
         self.autoscaler = WarmPoolController(
             self.platforms, self.perf, self.clock,
             make_policy(policy, **kw), tick_s=tick_s).attach()
+        self.autoscaler.recorder = self.recorder
         if start:
             self.autoscaler.start()
         return self.autoscaler
+
+    # ----------------------------------------------------- observability --
+    def attach_recorder(self, recorder):
+        """Attach a flight recorder (repro.obs) plane-wide: admission taps
+        here, launch taps at every platform, warm-pool taps at the
+        autoscaler, and a hedge-duplicate tap on the hedge policy."""
+        self.recorder = recorder
+        for p in self.platforms.values():
+            p.recorder = recorder
+        if self.autoscaler is not None:
+            self.autoscaler.recorder = recorder
+        if not self._hedge_tap:
+            self._hedge_tap = True
+
+            def _hedge_span(orig, dup):
+                rec = self.recorder
+                if rec is not None:
+                    rec.record_hedge(dup, orig, self.clock.now())
+
+            self.hedge.on_duplicate.append(_hedge_span)
+        return recorder
 
     # ----------------------------------------------------------- chains ---
     def chain_executor(self, fns: Dict[str, FunctionSpec], **kw):

@@ -38,6 +38,9 @@ class Gateway:
         if not self._authorized(principal, token):
             self.unauthorized += 1
             inv.status = "failed"
+            rec = self.cp.recorder
+            if rec is not None:
+                rec.record_reject(inv.fn.name, None, self.cp.clock.now(), 1)
             return False
         override = None
         if self.lb_policy is not None:
@@ -63,6 +66,10 @@ class Gateway:
             else:
                 for inv in invs:
                     inv.status = "failed"
+            rec = self.cp.recorder
+            if rec is not None:
+                rec.record_reject(None, None, self.cp.clock.now(),
+                                  len(invs))
             return 0
         if self.lb_policy is None:
             return self.cp.submit_batch(invs)

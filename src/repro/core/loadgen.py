@@ -187,6 +187,7 @@ class ColumnarResultSink:
         self._platform = np.empty(capacity, np.int32)
         self._fn = np.empty(capacity, np.int32)
         self._cold = np.empty(capacity, bool)
+        self._inv = np.empty(capacity, np.int64)
         self._platform_ids: Dict[str, int] = {}
         self._fn_ids: Dict[str, int] = {}
         self._fn_specs: Dict[str, FunctionSpec] = {}
@@ -197,7 +198,7 @@ class ColumnarResultSink:
     def _grow(self, need: int):
         cap = max(self._arrival.size * 2, need)
         for name in ("_arrival", "_end", "_exec", "_platform", "_fn",
-                     "_cold"):
+                     "_cold", "_inv"):
             a = getattr(self, name)
             b = np.empty(cap, a.dtype)
             b[:self._n] = a[:self._n]
@@ -221,6 +222,7 @@ class ColumnarResultSink:
             self._fn_specs[fname] = inv.fn
         self._fn[i] = fid
         self._cold[i] = inv.cold_start
+        self._inv[i] = inv.id
         self._n = i + 1
 
     @classmethod
@@ -241,6 +243,7 @@ class ColumnarResultSink:
         sink._platform[:n] = platform_idx
         sink._fn[:n] = fn_idx
         sink._cold[:n] = cold if cold is not None else False
+        sink._inv[:n] = np.arange(n, dtype=np.int64)   # synthetic ids
         sink._platform_ids = {name: i for i, name in enumerate(platforms)}
         sink._fn_ids = {f.name: i for i, f in enumerate(fns)}
         sink._fn_specs = {f.name: f for f in fns}
@@ -267,6 +270,7 @@ class ColumnarResultSink:
         return {"arrival": self._arrival[:n], "end": self._end[:n],
                 "exec": self._exec[:n], "platform": self._platform[:n],
                 "fn": self._fn[:n], "cold": self._cold[:n],
+                "inv_id": self._inv[:n],
                 "platform_ids": dict(self._platform_ids),
                 "fn_ids": dict(self._fn_ids),
                 "fn_specs": dict(self._fn_specs)}

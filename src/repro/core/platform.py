@@ -142,6 +142,8 @@ class TargetPlatform:
         self.bg_mem = 0.0
         self.on_complete: List[Callable[[Invocation], None]] = []
         self.on_fail: List[Callable[[Invocation], None]] = []
+        # flight recorder (repro.obs); None keeps every tap to one check
+        self.recorder = None
         self.inflight: Dict[int, Invocation] = {}
         energy.register(prof, clock.now())
         self._idler_scheduled = False
@@ -550,6 +552,14 @@ class TargetPlatform:
                 inv.cold_start = True
             self.clock.schedule(now + (startups[0] + exec_time),
                                 self._finish_cb(inv, fn, rep))
+            rec = self.recorder
+            if rec is not None:
+                # fire expression repeated verbatim: the recorded EXEC end
+                # must equal the scheduled completion instant bit-for-bit
+                rec.record_launch((inv,), (fn,), prof.name, now,
+                                  (startups[0],), (data_ts[0],),
+                                  (now + (startups[0] + exec_time),),
+                                  (colds[0],))
             return
         busy_at = base_busy + 1 + np.arange(n)
         factor = np.where(busy_at <= free_cores + 1e-9, 1.0, 2.0)
@@ -577,6 +587,11 @@ class TargetPlatform:
                 inv.cold_start = True
             cbs.append(self._finish_cb(inv, fn, rep))
         self.clock.schedule_many(fire_at.tolist(), cbs)
+        rec = self.recorder
+        if rec is not None:
+            rec.record_launch([s[0] for s in starts],
+                              [s[1] for s in starts], prof.name, now,
+                              startup, data_ts, fire_at, colds)
 
     def _finish_cb(self, inv: Invocation, fn: FunctionSpec,
                    rep: Replica) -> Callable[[], None]:

@@ -506,3 +506,21 @@ register("ramp/overload", ramp_overload)
 register("azure/minute-replay", azure_replay)
 register("scale/million-burst", million_burst)
 register("smoke/tiny", smoke_tiny)
+
+# ---------------------------------------------------------------------------
+# Flight-recorder A/B arms (repro.obs): the outage, burst-storm and
+# overload scenarios re-examined through latency decomposition — the
+# report's latency_breakdown section attributes each arm's SLO violations
+# to its dominant segment (queue growth under overload, cold starts after
+# recovery, ingress batching under bursts).
+# ---------------------------------------------------------------------------
+
+register("trace/hpc-outage",
+         lambda: platform_outage().replace(name="trace/hpc-outage",
+                                           trace=True))
+register("trace/burst-storm",
+         lambda: burst_storm().replace(name="trace/burst-storm",
+                                       trace=True))
+register("trace/overload-ramp",
+         lambda: ramp_overload().replace(name="trace/overload-ramp",
+                                         trace=True))

@@ -141,6 +141,11 @@ class Scenario:
     # (object key, destination store) pairs migrated before load starts —
     # the §5.1.4 adaptive data-management move the fig11 arms A/B
     migrate_objects: Tuple[Tuple[str, str], ...] = ()
+    # flight recorder (repro.obs): per-invocation lifecycle tracing and
+    # the report's latency_breakdown section; trace_sample < 1 keeps a
+    # deterministic head-based subset of invocations
+    trace: bool = False
+    trace_sample: float = 1.0
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -237,6 +242,9 @@ def assemble(sc: Scenario):
             policy_kwargs=kw.pop("policy_kwargs", None))
         if kw:
             raise ValueError(f"unknown autoscale keys: {sorted(kw)}")
+    if sc.trace:
+        from repro.obs import FlightRecorder
+        cp.attach_recorder(FlightRecorder(sample=sc.trace_sample))
     attach_completion_hooks(cp)
     gw = Gateway(cp)
     if sc.lb_policy is not None:
@@ -261,6 +269,9 @@ class ScenarioReport:
     # chain workloads only: per-label end-to-end latency percentiles,
     # bytes moved between platforms, and the planner's placement decision
     per_chain: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    # flight-recorder runs only: segment decomposition totals, exact-
+    # reconciliation counters, and SLO-violation attribution (repro.obs)
+    latency_breakdown: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -305,6 +316,15 @@ class ScenarioReport:
             for k in cls.REQUIRED_CHAIN:
                 if k not in stats:
                     raise ValueError(f"per_chain[{name!r}] missing {k!r}")
+        # latency_breakdown is additive too ({} on untraced runs)
+        lb = d.get("latency_breakdown", {})
+        if not isinstance(lb, dict):
+            raise ValueError("latency_breakdown must be a dict")
+        if lb:
+            for k in ("segment_totals_s", "slo_attribution",
+                      "exact_reconciled"):
+                if k not in lb:
+                    raise ValueError(f"latency_breakdown missing {k!r}")
 
 
 def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
@@ -518,8 +538,15 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         totals["chains_completed"] = chain_exec.completed
         totals["chains_failed"] = chain_exec.failed
 
+    latency_breakdown: Dict[str, Any] = {}
+    if cp.recorder is not None:
+        from repro.obs.analysis import latency_breakdown_section
+        latency_breakdown = latency_breakdown_section(cp.recorder, cols,
+                                                      fns)
+
     return ScenarioReport(schema_version=SCHEMA_VERSION,
                           scenario=sc.to_dict(), totals=totals,
                           per_platform=per_platform,
                           per_function=per_function,
-                          per_chain=per_chain)
+                          per_chain=per_chain,
+                          latency_breakdown=latency_breakdown)

@@ -1,0 +1,32 @@
+"""Observability (repro.obs): the FDN's flight recorder.
+
+The paper's FDN stands on monitoring (§3.1.2) — but windowed metrics say
+*that* p90 blew the SLO, never *why*.  This package records per-invocation
+lifecycle segments into struct-of-arrays span columns (``recorder``),
+decomposes response time into exactly-reconciling segments and attributes
+SLO violations to their dominant segment (``analysis``), and exports any
+run as Chrome trace-event JSON openable in Perfetto (``export``).
+
+Disabled, the recorder costs one ``is None`` check per admission burst;
+enabled, deterministic head-based sampling keeps million-invocation runs
+in budget.
+"""
+from repro.obs.recorder import (ADMIT, CHAIN_STAGE, COLD_START, DATA, EXEC,
+                                HEDGE, INGRESS, KIND_NAMES, LIFECYCLE,
+                                POOL_PREWARM, POOL_RETIRE, PREWARM_START,
+                                QUEUE, REJECT, SEGMENT_NAMES, FlightRecorder,
+                                SpanBuffer)
+from repro.obs.analysis import (Decomposition, chain_critical_paths,
+                                decompose, latency_breakdown_section,
+                                reconcile, slo_attribution)
+from repro.obs.export import chrome_trace_events, write_chrome_trace
+
+__all__ = [
+    "SpanBuffer", "FlightRecorder", "KIND_NAMES", "SEGMENT_NAMES",
+    "LIFECYCLE", "INGRESS", "QUEUE", "COLD_START", "PREWARM_START", "DATA",
+    "EXEC", "ADMIT", "REJECT", "HEDGE", "CHAIN_STAGE", "POOL_PREWARM",
+    "POOL_RETIRE",
+    "Decomposition", "decompose", "reconcile", "slo_attribution",
+    "chain_critical_paths", "latency_breakdown_section",
+    "chrome_trace_events", "write_chrome_trace",
+]

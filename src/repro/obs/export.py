@@ -1,0 +1,57 @@
+"""Chrome trace-event export: open any traced run in Perfetto.
+
+``write_chrome_trace`` serializes the recorder's span columns as the
+Chrome trace-event JSON format (``{"traceEvents": [...]}``, complete
+``"X"`` events with microsecond ``ts``/``dur``).  Platforms map to
+processes and invocations to tracks, so a scenario's queue waits, cold
+starts, data staging and executions line up visually per platform —
+load ``chrome://tracing`` or https://ui.perfetto.dev and drop the file.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List
+
+from repro.obs.recorder import KIND_NAMES, LIFECYCLE, FlightRecorder
+
+
+def chrome_trace_events(rec: FlightRecorder) -> List[Dict[str, Any]]:
+    events: List[Dict[str, Any]] = []
+    pnames = rec.platform_names()
+    fnames = rec.fn_names()
+    events.append({"name": "process_name", "ph": "M", "pid": 0,
+                   "args": {"name": "(control)"}})
+    for pid, pname in enumerate(pnames):
+        events.append({"name": "process_name", "ph": "M", "pid": pid + 1,
+                       "args": {"name": pname}})
+    cols = rec.spans.columns()
+    inv = cols["inv"]
+    kind = cols["kind"]
+    t0 = cols["t0"]
+    t1 = cols["t1"]
+    plat = cols["platform"]
+    fn = cols["fn"]
+    link = cols["link"]
+    for i in range(inv.size):
+        k = int(kind[i])
+        fid = int(fn[i])
+        events.append({
+            "name": KIND_NAMES[k],
+            "ph": "X",
+            "ts": float(t0[i]) * 1e6,
+            "dur": (float(t1[i]) - float(t0[i])) * 1e6,
+            "pid": int(plat[i]) + 1,
+            "tid": int(inv[i]) if inv[i] >= 0 else 0,
+            "cat": "lifecycle" if k < LIFECYCLE else "control",
+            "args": {"fn": fnames[fid] if 0 <= fid < len(fnames) else "",
+                     "link": int(link[i])},
+        })
+    return events
+
+
+def write_chrome_trace(rec: FlightRecorder, path: str) -> int:
+    """Write the trace file; returns the number of events written."""
+    events = chrome_trace_events(rec)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+    return len(events)

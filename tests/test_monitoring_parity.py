@@ -1,0 +1,93 @@
+"""Hypothesis property tests: ``ColumnarWindowSeries`` must be a drop-in
+replacement for ``WindowSeries`` under any interleaving of scalar ``add``
+and bulk ``add_many`` ingest.
+
+``hypothesis`` is an optional test extra (see pyproject.toml); without it
+this module degrades to a skip instead of a collection error — mirroring
+``tests/test_traces_properties.py``."""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.monitoring import (ColumnarWindowSeries,  # noqa: E402
+                                   WindowSeries)
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+# one ingest op: a scalar add or a bulk add_many of 0..20 samples;
+# timestamps cluster around a handful of windows so interleavings hit the
+# same window from both paths (the interesting aggregation case)
+_sample = st.tuples(st.floats(0.0, 50.0, allow_nan=False, width=32),
+                    st.floats(-100.0, 100.0, allow_nan=False, width=32))
+_op = st.one_of(
+    _sample.map(lambda s: ("add", [s])),
+    st.lists(_sample, max_size=20).map(lambda ss: ("add_many", ss)),
+)
+
+
+def _ingest(series, ops):
+    for kind, samples in ops:
+        if kind == "add":
+            (t, v), = samples
+            series.add(t, v)
+        else:
+            ts = np.array([t for t, _ in samples])
+            vs = np.array([v for _, v in samples])
+            series.add_many(ts, vs)
+
+
+def _assert_series_close(a, b):
+    assert len(a) == len(b)
+    for (ta, va), (tb, vb) in zip(a, b):
+        assert ta == tb
+        if math.isnan(va) or math.isnan(vb):
+            assert math.isnan(va) and math.isnan(vb)
+        else:
+            assert va == pytest.approx(vb, rel=1e-9, abs=1e-9)
+
+
+@given(st.lists(_op, max_size=30), st.floats(0.5, 20.0, allow_nan=False))
+@settings(**SETTINGS)
+def test_columnar_matches_reference_under_interleaving(ops, window_s):
+    ref = WindowSeries(window_s)
+    col = ColumnarWindowSeries(window_s)
+    _ingest(ref, ops)
+    _ingest(col, ops)
+
+    assert col.count() == ref.count()
+    assert col.windows() == ref.windows()
+    assert col.total() == pytest.approx(ref.total(), rel=1e-9, abs=1e-9)
+    # p90 is order-statistic interpolation over the same multiset: exact
+    # equality modulo NaN on the empty series
+    pr, pc = ref.p90(), col.p90()
+    if math.isnan(pr) or math.isnan(pc):
+        assert math.isnan(pr) and math.isnan(pc)
+    else:
+        assert pc == pr
+    for agg in ("sum", "mean", "count", "p90"):
+        _assert_series_close(col.series(agg), ref.series(agg))
+    assert sorted(col.all_values()) == pytest.approx(
+        sorted(ref.all_values()), rel=1e-9, abs=1e-9)
+
+
+def test_empty_series_nan_edges():
+    for cls in (WindowSeries, ColumnarWindowSeries):
+        s = cls(10.0)
+        assert s.count() == 0
+        assert s.total() == 0.0
+        assert s.windows() == []
+        assert s.series("p90") == []
+        assert math.isnan(s.p90())
+
+
+def test_single_sample_parity():
+    ref, col = WindowSeries(10.0), ColumnarWindowSeries(10.0)
+    for s in (ref, col):
+        s.add(3.0, 7.5)
+    assert ref.p90() == col.p90() == 7.5
+    assert ref.series("p90") == col.series("p90") == [(0.0, 7.5)]
+    assert ref.series("mean") == col.series("mean") == [(0.0, 7.5)]
