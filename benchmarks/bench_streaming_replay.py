@@ -19,7 +19,11 @@ Claims checked at both scales:
     actually received the stream);
   * peak RSS stays under ``--rss-limit-mb`` (default 1024) — measured
     with ``resource.getrusage``, so it covers the whole process
-    including the trace's count matrix.
+    including the trace's count matrix;
+  * live telemetry rollups (on by default; ``--no-rollups`` disables)
+    fold every admitted row into the multi-resolution tier rings under
+    the SAME RSS bound — O(tiers x capacity) rollup state regardless of
+    trace length is the engine's headline claim.
 
 ``--json PATH`` writes measurements (rows/s, peak RSS, totals) for the
 CI artifact."""
@@ -57,7 +61,8 @@ def _trace(minutes: int, total: int) -> Dict:
 
 def run_bench(smoke: bool = False,
               rss_limit_mb: float = DEFAULT_RSS_LIMIT_MB,
-              results_out: Optional[Dict] = None
+              results_out: Optional[Dict] = None,
+              rollups: bool = True
               ) -> Tuple[List[Row], List[str]]:
     rows: List[Row] = []
     failures: List[str] = []
@@ -68,6 +73,14 @@ def run_bench(smoke: bool = False,
 
     cp, _gw, fns = build_fdn(analytic=True)
     cp.kb.log_decisions = False
+    engine = None
+    if rollups:
+        from repro.obs.telemetry import TelemetryConfig, TelemetryEngine
+        # capacity 4096 lets a whole hour chunk (3600 finest buckets)
+        # fold as one vectorized span group instead of 8 ring wraps
+        engine = cp.attach_telemetry(
+            TelemetryEngine(TelemetryConfig(capacity=4096,
+                                            auto_flush_samples=None)))
     gc.collect()
     t0 = time.perf_counter()
     stats = stream_replay(cp, fns, counts, chunk_minutes=CHUNK_MINUTES,
@@ -76,11 +89,20 @@ def run_bench(smoke: bool = False,
     peak_mb = _peak_rss_mb()
     rate = stats.submitted / max(dt, 1e-9)
 
+    extra = ""
+    if engine is not None:
+        engine.finalize()
+        roll = engine.rollup_summary()
+        extra = (f";rollup_samples={roll['samples']}"
+                 f";rollup_keys={roll['keys']}")
+        check(roll["samples"] == stats.admitted,
+              "rollups must fold every admitted row "
+              f"(got {roll['samples']}/{stats.admitted})", failures)
     rows.append(Row(f"streaming_replay/{label}", dt / max(total, 1) * 1e6,
                     f"rows_per_s={rate:.0f};submitted={stats.submitted};"
                     f"chunks={stats.chunks};"
                     f"peak_chunk_rows={stats.peak_chunk_rows};"
-                    f"peak_rss_mb={peak_mb:.0f}"))
+                    f"peak_rss_mb={peak_mb:.0f}" + extra))
 
     check(stats.submitted == total,
           f"every trace arrival must be submitted "
@@ -106,6 +128,8 @@ def run_bench(smoke: bool = False,
             "rss_limit_mb": rss_limit_mb,
             "chunk_minutes": CHUNK_MINUTES, **stats.to_dict(),
         })
+        if engine is not None:
+            results_out["rollup"] = engine.rollup_summary()
     return rows, failures
 
 
@@ -119,7 +143,8 @@ def main(argv: List[str]) -> int:
         json_path = argv[argv.index("--json") + 1]
     results: Dict = {}
     rows, failures = run_bench(smoke=smoke, rss_limit_mb=rss_limit,
-                               results_out=results)
+                               results_out=results,
+                               rollups="--no-rollups" not in argv)
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
         f.write("\n")

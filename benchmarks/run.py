@@ -83,11 +83,19 @@ def trace_main(args) -> int:
     if len(names) != 1:
         print(usage)
         return 1
+    if names[0] not in registry.names():
+        print(f"unknown scenario {names[0]!r}; any registered scenario "
+              f"works, and these arms come pre-traced:")
+        for name in registry.names():
+            if name.startswith("trace/"):
+                print(f"  {name}")
+        return 1
     sc = registry.get(names[0]).replace(trace=True, trace_sample=sample)
     report, cp, _sink = run_scenario_state(sc)
     if out_path is None:
         out_path = "trace_" + names[0].replace("/", "_") + ".json"
-    n_events = write_chrome_trace(cp.recorder, out_path)
+    n_events = write_chrome_trace(cp.recorder, out_path,
+                                  alerts=report.alerts)
     print(f"# {n_events} trace events -> {out_path}")
     print(json.dumps(report.latency_breakdown, indent=2, sort_keys=True))
     return 0

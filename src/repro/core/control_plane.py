@@ -73,6 +73,10 @@ class FDNControlPlane:
         # tap in the admission paths guards on it with one check per burst
         self.recorder = None
         self._hedge_tap = False
+        # live telemetry engine (repro.obs.telemetry); None until
+        # attach_telemetry — metrics-ingest and platform-health taps all
+        # guard on it with one ``is None`` check
+        self.telemetry = None
         # retain_completions=False drops the per-invocation completed and
         # rejected lists (open-loop sinks own the samples; 10^6-invocation
         # scenarios must not retain a million Invocation objects here)
@@ -104,6 +108,7 @@ class FDNControlPlane:
         platform.on_complete.append(self._on_complete)
         platform.on_fail.append(self._on_fail)
         platform.recorder = self.recorder
+        platform.telemetry = self.telemetry
         self.detector.heartbeat(name)
         self._schedule_heartbeat(platform)
         if self.autoscaler is not None:
@@ -122,6 +127,11 @@ class FDNControlPlane:
                 self.detector.heartbeat(name)
             else:
                 self.detector.check(name)   # accrue suspicion -> eject
+            tel = self.telemetry
+            if tel is not None:
+                # periodic health sample even when the platform is idle
+                # or failed (drain-side taps go quiet in both states)
+                platform.sample_health(tel)
             self.clock.after(self.detector.interval, beat)
 
         self.clock.after(self.detector.interval, beat)
@@ -565,6 +575,19 @@ class FDNControlPlane:
 
             self.hedge.on_duplicate.append(_hedge_span)
         return recorder
+
+    def attach_telemetry(self, engine):
+        """Attach a live telemetry engine (repro.obs.telemetry)
+        plane-wide: metrics-ingest taps via the registry, platform-health
+        taps (queue depth / utilization / watts) at every platform's
+        drain tail and the liveness heartbeat.  Callers register SLO
+        thresholds via ``engine.set_slo`` so rollup buckets count
+        error-budget burn."""
+        self.telemetry = engine
+        self.metrics.telemetry = engine
+        for p in self.platforms.values():
+            p.telemetry = engine
+        return engine
 
     # ----------------------------------------------------------- chains ---
     def chain_executor(self, fns: Dict[str, FunctionSpec], **kw):

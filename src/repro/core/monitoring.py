@@ -31,14 +31,23 @@ from typing import Dict, List, Optional, Tuple, Union
 from repro.core.types import Invocation
 
 
+def _interp_indices(n: int, q: float) -> Tuple[int, int, float]:
+    """The one shared definition of linear-interpolated percentiles
+    (numpy's default 'linear' method): the two order statistics bracketing
+    rank ``q * (n - 1)`` and the interpolation fraction between them.
+    Every percentile in the repo routes through here."""
+    idx = q * (n - 1)
+    lo = int(math.floor(idx))
+    hi = min(lo + 1, n - 1)
+    return lo, hi, idx - lo
+
+
 def percentile(sorted_vals, q: float) -> float:
     """Linear-interpolated percentile over an ascending list OR ndarray."""
-    if len(sorted_vals) == 0:
+    n = len(sorted_vals)
+    if n == 0:
         return float("nan")
-    idx = q * (len(sorted_vals) - 1)
-    lo = int(math.floor(idx))
-    hi = min(lo + 1, len(sorted_vals) - 1)
-    frac = idx - lo
+    lo, hi, frac = _interp_indices(n, q)
     return float(sorted_vals[lo] * (1 - frac) + sorted_vals[hi] * frac)
 
 
@@ -49,10 +58,7 @@ def percentile_unsorted(vals: np.ndarray, q: float) -> float:
     n = vals.size
     if n == 0:
         return float("nan")
-    idx = q * (n - 1)
-    lo = int(math.floor(idx))
-    hi = min(lo + 1, n - 1)
-    frac = idx - lo
+    lo, hi, frac = _interp_indices(n, q)
     part = np.partition(vals, (lo, hi))
     return float(part[lo] * (1 - frac) + part[hi] * frac)
 
@@ -262,6 +268,10 @@ class MetricsRegistry:
         # the end of the run via ``record_completions`` (FDNInspector's
         # 10^6-invocation scenarios never pay a per-sample hot path).
         self.defer_completions = False
+        # Live telemetry subscription (repro.obs.telemetry): every ingest
+        # through add/add_many is mirrored to the engine's rollups.  One
+        # ``is None`` check per call — same discipline as the recorder.
+        self.telemetry = None
 
     def _get(self, platform: str, fn: str, metric: str) -> SeriesLike:
         key = (platform, fn, metric)
@@ -271,10 +281,17 @@ class MetricsRegistry:
 
     def add(self, platform: str, fn: str, metric: str, t: float, v: float):
         self._get(platform, fn, metric).add(t, v)
+        tel = self.telemetry
+        if tel is not None:
+            tel.observe(platform, fn, metric, t, v)
 
     def add_many(self, platform: str, fn: str, metric: str, ts, vs):
         """Bulk sample ingest (columnar result sinks, batched replays)."""
         self._get(platform, fn, metric).add_many(ts, vs)
+        tel = self.telemetry
+        if tel is not None:
+            tel.observe_many(platform, fn, metric, np.asarray(ts, float),
+                             np.asarray(vs, float))
 
     def record_completion(self, inv: Invocation, visible_infra: bool = True):
         if self.defer_completions:

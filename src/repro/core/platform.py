@@ -144,6 +144,12 @@ class TargetPlatform:
         self.on_fail: List[Callable[[Invocation], None]] = []
         # flight recorder (repro.obs); None keeps every tap to one check
         self.recorder = None
+        # live telemetry engine (repro.obs.telemetry); same guard
+        # discipline.  queued_rows mirrors the queue depth in rows (a
+        # _ColumnarEntry is one deque entry but many rows) so health
+        # samples never walk the deque.
+        self.telemetry = None
+        self.queued_rows = 0
         self.inflight: Dict[int, Invocation] = {}
         energy.register(prof, clock.now())
         self._idler_scheduled = False
@@ -304,6 +310,7 @@ class TargetPlatform:
             inv.status = "queued"
             inflight[inv.id] = inv
             queue_append(inv)
+            self.queued_rows += 1
             if counts is not None:
                 counts[name] = counts.get(name, 0) + 1
             queued = True
@@ -348,6 +355,7 @@ class TargetPlatform:
                     name = specs[j].name
                     counts[name] = counts.get(name, 0) + int(k)
         self.queue.append(_ColumnarEntry(batch, idxs, self.clock.now()))
+        self.queued_rows += int(idxs.size)
         self._drain()
         self._schedule_idler()
 
@@ -363,6 +371,7 @@ class TargetPlatform:
         inv.status = "queued"
         self.inflight[inv.id] = inv
         self.queue.append(inv)
+        self.queued_rows += 1
         counts = self.autoscale_counts
         if counts is not None:
             name = inv.fn.name
@@ -494,8 +503,12 @@ class TargetPlatform:
                                                          count=count)
                 self._launch(starts, startups, colds, mem_at, exec_base,
                              data_ts, base_busy, now)
+                self.queued_rows -= len(starts)
         self._touch_energy()
         self._sample_infra()
+        tel = self.telemetry
+        if tel is not None:
+            self.sample_health(tel)
 
     # -------------------------------------------------------- execution ---
     def _interference_factor(self) -> float:
@@ -755,12 +768,23 @@ class TargetPlatform:
                     lost.append(inv)
         self.inflight.clear()
         self.queue.clear()
+        self.queued_rows = 0
         for inv in lost:
             self._fail(inv, "platform failure")
         self._touch_energy()
 
+    def sample_health(self, tel) -> None:
+        """Push one (queue depth, utilization, watts) health sample to
+        the telemetry engine — called from the drain tail and the
+        control plane's liveness heartbeat."""
+        util = 0.0 if self.failed else self.cpu_util()
+        tel.record_health(self.prof.name, self.clock.now(),
+                          float(self.queued_rows), util,
+                          self.energy.power_w(self.prof.name, util))
+
     def recover(self):
         self.failed = False
+        self.queued_rows = 0
         for rs in self.replicas.values():
             for r in rs:
                 r.retired = True

@@ -524,3 +524,47 @@ register("trace/burst-storm",
 register("trace/overload-ramp",
          lambda: ramp_overload().replace(name="trace/overload-ramp",
                                          trace=True))
+
+# ---------------------------------------------------------------------------
+# Live-telemetry arms (repro.obs.telemetry/alerts): the same stress
+# scenarios watched *online* — multi-resolution rollups feed burn-rate
+# SLO alerts and platform-health detectors, and the report gains an
+# ``alerts`` section.  Burn windows are shrunk from the SRE production
+# defaults (5m/1h, 1h/6h) to match these 2-minute horizons; the health
+# thresholds are tuned so ``telemetry/smoke-quiet`` emits zero events
+# (tests pin both directions).
+# ---------------------------------------------------------------------------
+
+TELEMETRY_DEFAULTS: Dict[str, object] = {
+    "tiers_s": [1.0, 10.0, 60.0],
+    "capacity": 512,
+    "slo_target": 0.9,                 # 10% error budget
+    "eval_tier": 0,                    # evaluate on the 1 s tier
+    "rules": [
+        {"name": "fast_burn", "short_s": 10.0, "long_s": 60.0,
+         "burn": 8.0, "severity": "page"},
+        {"name": "slow_burn", "short_s": 30.0, "long_s": 120.0,
+         "burn": 3.0, "severity": "ticket"},
+    ],
+    "min_long_samples": 20,
+    "z_threshold": 6.0,
+    "k_consecutive": 3,
+    "warmup_buckets": 8,
+}
+
+
+def _with_telemetry(sc: Scenario, name: str) -> Scenario:
+    return sc.replace(name=name, telemetry=dict(TELEMETRY_DEFAULTS))
+
+
+register("telemetry/hpc-outage",
+         lambda: _with_telemetry(platform_outage(),
+                                 "telemetry/hpc-outage"))
+register("telemetry/overload-ramp",
+         lambda: _with_telemetry(ramp_overload(),
+                                 "telemetry/overload-ramp"))
+register("telemetry/burst-storm",
+         lambda: _with_telemetry(burst_storm(),
+                                 "telemetry/burst-storm"))
+register("telemetry/smoke-quiet",
+         lambda: _with_telemetry(smoke_tiny(), "telemetry/smoke-quiet"))

@@ -146,6 +146,11 @@ class Scenario:
     # deterministic head-based subset of invocations
     trace: bool = False
     trace_sample: float = 1.0
+    # live telemetry (repro.obs.telemetry): multi-resolution rollups,
+    # burn-rate SLO alerting and platform-health anomaly detection.  A
+    # dict mixing TelemetryConfig and AlertConfig keys (each picks the
+    # keys it knows), or None to leave the engine off
+    telemetry: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -245,6 +250,12 @@ def assemble(sc: Scenario):
     if sc.trace:
         from repro.obs import FlightRecorder
         cp.attach_recorder(FlightRecorder(sample=sc.trace_sample))
+    if sc.telemetry is not None:
+        from repro.obs.telemetry import TelemetryConfig, TelemetryEngine
+        engine = cp.attach_telemetry(
+            TelemetryEngine(TelemetryConfig.from_dict(sc.telemetry)))
+        for fn in fns.values():
+            engine.set_slo(fn.name, fn.slo.p90_response_s)
     attach_completion_hooks(cp)
     gw = Gateway(cp)
     if sc.lb_policy is not None:
@@ -272,6 +283,9 @@ class ScenarioReport:
     # flight-recorder runs only: segment decomposition totals, exact-
     # reconciliation counters, and SLO-violation attribution (repro.obs)
     latency_breakdown: Dict[str, Any] = field(default_factory=dict)
+    # telemetry runs only: rollup summary, burn-rate SLO alert events and
+    # platform-health anomalies (repro.obs.telemetry / repro.obs.alerts)
+    alerts: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -325,6 +339,14 @@ class ScenarioReport:
                       "exact_reconciled"):
                 if k not in lb:
                     raise ValueError(f"latency_breakdown missing {k!r}")
+        # alerts is additive too ({} when the telemetry engine is off)
+        al = d.get("alerts", {})
+        if not isinstance(al, dict):
+            raise ValueError("alerts must be a dict")
+        if al:
+            for k in ("enabled", "rollup", "slo", "health"):
+                if k not in al:
+                    raise ValueError(f"alerts missing {k!r}")
 
 
 def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
@@ -544,9 +566,16 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         latency_breakdown = latency_breakdown_section(cp.recorder, cols,
                                                       fns)
 
+    alerts: Dict[str, Any] = {}
+    if cp.telemetry is not None:
+        from repro.obs.alerts import AlertConfig, alerts_section
+        alerts = alerts_section(cp.telemetry, sorted(fns),
+                                AlertConfig.from_dict(sc.telemetry or {}))
+
     return ScenarioReport(schema_version=SCHEMA_VERSION,
                           scenario=sc.to_dict(), totals=totals,
                           per_platform=per_platform,
                           per_function=per_function,
                           per_chain=per_chain,
-                          latency_breakdown=latency_breakdown)
+                          latency_breakdown=latency_breakdown,
+                          alerts=alerts)

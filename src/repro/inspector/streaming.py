@@ -100,6 +100,7 @@ def stream_replay(cp, specs: Mapping[str, FunctionSpec],
     per-function decisions route via one representative materialized row
     per present function."""
     names = list(counts)
+    tel = cp.metrics.telemetry    # live rollups fold per chunk when set
     spec_list = [specs[name] for name in names]
     mat = np.stack([np.asarray(counts[name], dtype=np.int64)
                     for name in names])
@@ -167,12 +168,20 @@ def stream_replay(cp, specs: Mapping[str, FunctionSpec],
                            for key in fn.data_objects)
             cp.perf.fold_observations(fn.name, prof.name, exec_s,
                                       exec_s + access_s, k)
+            if tel is not None:
+                tel.observe_many(prof.name, fn.name, "response_time",
+                                 batch.arrival_t[batch.fn_idx == j],
+                                 np.full(k, exec_s + access_s))
             adm_f[j] += k
             chunk_admitted += k
             cell = (j, prof.name)
             admitted_fp[cell] = admitted_fp.get(cell, 0) + k
         cp.kb.count_decisions(chunk_admitted)
         stats.admitted += chunk_admitted
+        if tel is not None:
+            # fold the chunk's rollups now: pending buffers stay O(chunk)
+            # and a 14-day replay keeps O(tiers x capacity) rollup state
+            tel.flush()
         if on_chunk is not None:
             on_chunk(ci, n)
 

@@ -10,6 +10,12 @@ run as Chrome trace-event JSON openable in Perfetto (``export``).
 Disabled, the recorder costs one ``is None`` check per admission burst;
 enabled, deterministic head-based sampling keeps million-invocation runs
 in budget.
+
+The live half (``telemetry`` / ``alerts``) watches the system while it
+runs: multi-resolution rollup tiers over the columnar metrics path,
+multi-window burn-rate SLO alerting and EWMA+MAD platform-health
+anomaly detection — same ``is None``-guard discipline, O(tiers) memory
+on streams of any length.
 """
 from repro.obs.recorder import (ADMIT, CHAIN_STAGE, COLD_START, DATA, EXEC,
                                 HEDGE, INGRESS, KIND_NAMES, LIFECYCLE,
@@ -19,7 +25,12 @@ from repro.obs.recorder import (ADMIT, CHAIN_STAGE, COLD_START, DATA, EXEC,
 from repro.obs.analysis import (Decomposition, chain_critical_paths,
                                 decompose, latency_breakdown_section,
                                 reconcile, slo_attribution)
-from repro.obs.export import chrome_trace_events, write_chrome_trace
+from repro.obs.export import (alert_annotation_events, chrome_trace_events,
+                              write_chrome_trace)
+from repro.obs.telemetry import (TelemetryConfig, TelemetryEngine, TierRing,
+                                 SeriesRollup)
+from repro.obs.alerts import (AlertConfig, BurnRule, alerts_section,
+                              evaluate_health, evaluate_slo_burn)
 
 __all__ = [
     "SpanBuffer", "FlightRecorder", "KIND_NAMES", "SEGMENT_NAMES",
@@ -28,5 +39,8 @@ __all__ = [
     "POOL_RETIRE",
     "Decomposition", "decompose", "reconcile", "slo_attribution",
     "chain_critical_paths", "latency_breakdown_section",
-    "chrome_trace_events", "write_chrome_trace",
+    "chrome_trace_events", "write_chrome_trace", "alert_annotation_events",
+    "TelemetryConfig", "TelemetryEngine", "TierRing", "SeriesRollup",
+    "AlertConfig", "BurnRule", "alerts_section", "evaluate_health",
+    "evaluate_slo_burn",
 ]

@@ -6,13 +6,53 @@ Chrome trace-event JSON format (``{"traceEvents": [...]}``, complete
 processes and invocations to tracks, so a scenario's queue waits, cold
 starts, data staging and executions line up visually per platform —
 load ``chrome://tracing`` or https://ui.perfetto.dev and drop the file.
+
+``alert_annotation_events`` overlays the live-telemetry alert log
+(repro.obs.alerts) as instant events: SLO burn alerts land on the
+control track (pid 0, they aggregate across platforms) and platform
+health anomalies on their platform's track, so a queue-depth anomaly
+lines up with the queue spans that caused it.
 """
 from __future__ import annotations
 
 import json
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.obs.recorder import KIND_NAMES, LIFECYCLE, FlightRecorder
+
+
+def alert_annotation_events(slo_events: Sequence[Dict[str, Any]],
+                            health_events: Sequence[Dict[str, Any]],
+                            pnames: Sequence[str]
+                            ) -> List[Dict[str, Any]]:
+    """Alert log entries as Chrome instant events ("i", process scope).
+
+    ``pnames`` is the recorder's platform order — the same pid mapping
+    (platform index + 1) the span events use; health events for
+    platforms the recorder never saw fall back to the control track."""
+    pid_of = {name: i + 1 for i, name in enumerate(pnames)}
+    events: List[Dict[str, Any]] = []
+    for e in slo_events:
+        events.append({
+            "name": f"slo:{e['rule']}:{e['kind']}",
+            "ph": "i", "s": "p",
+            "ts": float(e["t"]) * 1e6,
+            "pid": 0, "tid": 0,
+            "cat": "alert",
+            "args": {"fn": e["fn"], "severity": e["severity"],
+                     "burn_short": e["burn_short"],
+                     "burn_long": e["burn_long"]},
+        })
+    for e in health_events:
+        events.append({
+            "name": f"health:{e['metric']}:{e['kind']}",
+            "ph": "i", "s": "p",
+            "ts": float(e["t"]) * 1e6,
+            "pid": pid_of.get(e["platform"], 0), "tid": 0,
+            "cat": "alert",
+            "args": {"platform": e["platform"], "z": e["z"]},
+        })
+    return events
 
 
 def chrome_trace_events(rec: FlightRecorder) -> List[Dict[str, Any]]:
@@ -49,9 +89,19 @@ def chrome_trace_events(rec: FlightRecorder) -> List[Dict[str, Any]]:
     return events
 
 
-def write_chrome_trace(rec: FlightRecorder, path: str) -> int:
-    """Write the trace file; returns the number of events written."""
+def write_chrome_trace(rec: FlightRecorder, path: str,
+                       alerts: Optional[Dict[str, Any]] = None) -> int:
+    """Write the trace file; returns the number of events written.
+
+    ``alerts`` is a ScenarioReport ``alerts`` section: its SLO and
+    health event logs become instant-event annotations on the matching
+    tracks."""
     events = chrome_trace_events(rec)
+    if alerts and alerts.get("enabled"):
+        events += alert_annotation_events(
+            alerts.get("slo", {}).get("events", []),
+            alerts.get("health", {}).get("events", []),
+            rec.platform_names())
     with open(path, "w") as f:
         json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
     return len(events)

@@ -213,3 +213,59 @@ def test_scenario_diff_tolerates_added_section():
     # the reverse — the new report *dropped* a section — is still drift
     drifts = diff_reports(golden, a)
     assert any("latency_breakdown" in d.path for d in drifts)
+
+
+def test_alert_annotation_events_track_mapping():
+    from repro.obs import alert_annotation_events
+    slo = [{"t": 12.0, "kind": "fire", "fn": "f", "rule": "fast_burn",
+            "severity": "page", "burn_short": 9.1, "burn_long": 8.2}]
+    health = [{"t": 30.0, "kind": "fire", "platform": "edge-cluster",
+               "metric": "queue_depth", "z": 7.5},
+              {"t": 31.0, "kind": "resolve", "platform": "never-seen",
+               "metric": "watts", "z": 1.0}]
+    pnames = ["hpc-node-cluster", "edge-cluster"]
+    events = alert_annotation_events(slo, health, pnames)
+    assert len(events) == 3
+    for e in events:
+        assert e["ph"] == "i" and e["s"] == "p" and e["cat"] == "alert"
+        assert isinstance(e["pid"], int) and e["tid"] == 0
+    # SLO burn alerts land on the control track (pid 0)
+    assert events[0]["name"] == "slo:fast_burn:fire"
+    assert events[0]["pid"] == 0 and events[0]["ts"] == 12.0 * 1e6
+    assert events[0]["args"]["severity"] == "page"
+    # health alerts land on THEIR platform's span track (index + 1)
+    assert events[1]["name"] == "health:queue_depth:fire"
+    assert events[1]["pid"] == pnames.index("edge-cluster") + 1
+    assert events[1]["args"]["z"] == 7.5
+    # a platform the recorder never saw falls back to the control track
+    assert events[2]["pid"] == 0
+
+
+def test_chrome_trace_alert_annotation_round_trip(tmp_path):
+    import itertools
+
+    from repro.core import types as core_types
+    from repro.inspector.scenario import run_scenario_state
+
+    core_types._inv_counter = itertools.count()
+    sc = registry.get("telemetry/hpc-outage").replace(trace=True)
+    report, cp, _sink = run_scenario_state(sc)
+    alerts = report.alerts
+    assert alerts["enabled"] and alerts["health"]["fires"] > 0
+    path = tmp_path / "trace.json"
+    plain = write_chrome_trace(cp.recorder, str(path))
+    n = write_chrome_trace(cp.recorder, str(path), alerts=alerts)
+    events = json.loads(path.read_text())["traceEvents"]
+    notes = [e for e in events if e.get("cat") == "alert"]
+    expect = len(alerts["slo"]["events"]) + len(alerts["health"]["events"])
+    assert len(notes) == expect > 0
+    assert n == plain + expect       # annotations are purely additive
+    # every health annotation sits on the track whose process_name meta
+    # is its platform — Perfetto shows the alert above that row's spans
+    track = {e["pid"]: e["args"]["name"] for e in events
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    for e in notes:
+        if e["name"].startswith("health:"):
+            assert track[e["pid"]] == e["args"]["platform"]
+        else:
+            assert e["pid"] == 0

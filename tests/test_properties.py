@@ -191,3 +191,49 @@ def test_data_pipeline_host_sharding_disjoint(hosts):
     # rows are distinct across hosts (w.h.p.)
     flat = {tuple(r) for r in full.tolist()}
     assert len(flat) == full.shape[0]
+
+
+@given(st.lists(st.tuples(st.floats(0.0, 299.0, allow_nan=False),
+                          st.integers(0, 4096)),
+                min_size=1, max_size=400),
+       st.integers(1, 64), st.booleans())
+@settings(**SETTINGS)
+def test_rollup_tier_merge_consistency(pairs, chunk, start_bulk):
+    """Rollup cascade invariant (repro.obs.telemetry): 1 s tiers merged
+    up to 60 s equal a direct 60 s rollup EXACTLY for ids / count / sum /
+    min / max / bad — under any interleaving of scalar ``add`` and bulk
+    ``add_many`` and any chunk size.  Values are dyadic (k/64) so float
+    sums are associativity-proof; quantile sketches are approximate but
+    must stay inside their bucket's exact [min, max]."""
+    from repro.obs.telemetry import TelemetryConfig, TelemetryEngine
+
+    ts = np.sort(np.array([t for t, _ in pairs]))
+    vs = np.array([v for _, v in pairs], dtype=float) / 64.0
+
+    def build(tiers):
+        eng = TelemetryEngine(TelemetryConfig(
+            tiers_s=tiers, capacity=512, auto_flush_samples=None))
+        eng.set_slo("f", 8.0)
+        bulk = start_bulk
+        for i in range(0, len(ts), chunk):
+            if bulk:
+                eng.observe_many("p", "f", "response_time",
+                                 ts[i:i + chunk], vs[i:i + chunk])
+            else:
+                for t, v in zip(ts[i:i + chunk], vs[i:i + chunk]):
+                    eng.observe("p", "f", "response_time",
+                                float(t), float(v))
+            bulk = not bulk
+        eng.finalize()
+        return eng
+
+    cascade = build((1.0, 10.0, 60.0))
+    direct = build((60.0,))
+    a = cascade.get_series("p", "f", "response_time", tier=2)
+    b = direct.get_series("p", "f", "response_time", tier=0)
+    for i, name in enumerate(("ids", "counts", "sums", "mins", "maxs",
+                              "bad")):
+        np.testing.assert_array_equal(a[i], b[i], err_msg=name)
+    assert int(a[1].sum()) == len(ts)
+    q = a[6]
+    assert np.all((q >= a[3]) & (q <= a[4]))
