@@ -29,7 +29,11 @@ paths on the five Table-3 platforms with the production
     streaming-replay configuration: no KB decision rows);
   * ``columnar_traced`` — the columnar arm with the flight recorder
     attached at 1/16 head-based sampling (repro.obs): the tracing-
-    overhead gate, pinned <= 15% below the untraced columnar rate.
+    overhead gate, pinned <= 15% below the untraced columnar rate;
+  * ``columnar_qos`` — the columnar arm with the QoS layer armed
+    (three classes + tenants on every row, non-uniform DRR weights, the
+    admission gate in the path): the QoS-overhead gate, pinned <= 15%
+    below the plain columnar rate.
 
 No simulated time elapses while submitting, so all arms schedule against
 identical platform-state snapshots at t=0 and the measurement isolates
@@ -87,12 +91,17 @@ def _make_invs(fns, n: int) -> List[Invocation]:
     return [Invocation(specs[i % len(specs)], 0.0) for i in range(n)]
 
 
-def _make_stream(fns, n: int) -> InvocationBatch:
-    """The same round-robin mix as ``_make_invs``, born columnar."""
+def _make_stream(fns, n: int, qos: bool = False) -> InvocationBatch:
+    """The same round-robin mix as ``_make_invs``, born columnar.  With
+    ``qos`` every row carries a class (cycling through all three) and a
+    tenant, so the QoS arm pays the full column cost."""
     specs = [fns[name] for name in FN_MIX]
-    return InvocationBatch(specs,
-                           np.arange(n, dtype=np.int32) % len(specs),
-                           np.zeros(n))
+    idx = np.arange(n, dtype=np.int32)
+    kw = {}
+    if qos:
+        kw = {"qos": (idx % 3).astype(np.int8),
+              "tenant": (idx % 7).astype(np.int32)}
+    return InvocationBatch(specs, idx % len(specs), np.zeros(n), **kw)
 
 
 def _seed_observations(cp, fns, per_pair: int = 12):
@@ -126,8 +135,14 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         from repro.obs import FlightRecorder
         cp.kb.log_decisions = False
         cp.attach_recorder(FlightRecorder(sample=1.0 / 16))
-    if kind in ("columnar", "columnar_traced"):
-        stream = _make_stream(fns, n)
+    elif kind == "columnar_qos":
+        from repro.core.qos import QosSpec
+        cp.kb.log_decisions = False
+        # DRR queues + admission gate armed; no limits or thresholds,
+        # so every row is still accepted and the arms stay comparable
+        cp.attach_qos(QosSpec(weights=(4, 2, 1)))
+    if kind in ("columnar", "columnar_traced", "columnar_qos"):
+        stream = _make_stream(fns, n, qos=kind == "columnar_qos")
     else:
         invs = _make_invs(fns, n)
 
@@ -143,7 +158,7 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(invs[lo:lo + BATCH])
-    elif kind in ("columnar", "columnar_traced"):
+    elif kind in ("columnar", "columnar_traced", "columnar_qos"):
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(stream.view(lo,
@@ -240,6 +255,7 @@ def run_bench(smoke: bool = False,
     reps = 2 if smoke else 3                   # best-of: tame CI jitter
     for kind, kn in (("per_invocation", n), ("batched", n),
                      ("columnar", n), ("columnar_traced", n),
+                     ("columnar_qos", n),
                      ("pr1_hedged", hedge_n), ("jit_hedged", hedge_n)):
         dt = float("inf")
         for _ in range(reps):
@@ -256,11 +272,13 @@ def run_bench(smoke: bool = False,
     hedged_speedup = rates["jit_hedged"] / max(rates["pr1_hedged"], 1e-9)
     columnar_speedup = rates["columnar"] / max(rates["batched"], 1e-9)
     traced_frac = rates["columnar_traced"] / max(rates["columnar"], 1e-9)
+    qos_frac = rates["columnar_qos"] / max(rates["columnar"], 1e-9)
     rows.append(Row("sched_throughput/speedups", 0.0,
                     f"batched_vs_per_invocation={speedup:.1f}x;"
                     f"jit_hedged_vs_pr1_hedged={hedged_speedup:.1f}x;"
                     f"columnar_vs_batched={columnar_speedup:.1f}x;"
                     f"traced_vs_columnar={traced_frac:.2f}x;"
+                    f"qos_vs_columnar={qos_frac:.2f}x;"
                     f"batch={BATCH}"))
 
     target = 3.0 if smoke else 10.0
@@ -276,6 +294,15 @@ def run_bench(smoke: bool = False,
     check(traced_frac >= 0.85,
           "sampled tracing (1/16) should cost <= 15% of the columnar "
           f"admission rate (got {traced_frac:.2f}x)", failures)
+    # at smoke scale (~3 ms per timed rep) the ratio is jitter-dominated;
+    # the 15% pin is enforced at full scale, where the per-drain DRR cost
+    # amortizes (measured ~0.9-1.0x), and absolutely via the pinned
+    # columnar_qos decisions/s floor
+    qos_target = 0.70 if smoke else 0.85
+    check(qos_frac >= qos_target,
+          f"QoS classes + DRR + admission gate should cost <= "
+          f"{(1.0 - qos_target):.0%} of the columnar admission rate "
+          f"(got {qos_frac:.2f}x)", failures)
     _check_backend_parity(failures)
 
     if results_out is not None:
@@ -287,7 +314,8 @@ def run_bench(smoke: bool = False,
                          round(hedged_speedup, 2),
                          "columnar_vs_batched":
                          round(columnar_speedup, 2),
-                         "traced_vs_columnar": round(traced_frac, 3)},
+                         "traced_vs_columnar": round(traced_frac, 3),
+                         "qos_vs_columnar": round(qos_frac, 3)},
             "tracing_overhead_pct": round((1.0 - traced_frac) * 100.0, 1),
             "planned_stages_per_s":
             round(_planned_stages_per_s(smoke), 1),

@@ -30,6 +30,7 @@ BENCHES = [
     "bench_chain_throughput",
     "bench_autoscale",
     "bench_streaming_replay",
+    "bench_qos",
 ]
 
 

@@ -15,7 +15,8 @@ from repro.core.types import (SLO, FunctionSpec, Invocation,
                               PlatformProfile, DeploymentSpec)
 from repro.core.invocation_batch import InvocationBatch
 from repro.core.simulator import SimClock
-from repro.core.control_plane import FDNControlPlane, AccessControl
+from repro.core.control_plane import (AccessControl, AdmissionRequest,
+                                      FDNControlPlane)
 from repro.core.gateway import Gateway
 from repro.core.platform import TargetPlatform, ExecutionModel
 from repro.core.scheduler import (POLICIES, PerformanceRankedPolicy,
@@ -35,11 +36,16 @@ from repro.core.deployment import DeploymentGenerator
 from repro.core.data_placement import DataPlacementManager, ObjectStore
 from repro.core.energy import EnergyMeter
 from repro.core.faults import FailureDetector, Redeliverer, HedgePolicy
+from repro.core.qos import (AdmissionController, QosSpec,
+                            QOS_BATCH, QOS_LATENCY_CRITICAL, QOS_NAMES,
+                            QOS_STANDARD, qos_id)
 
 __all__ = [
     "SLO", "FunctionSpec", "Invocation", "InvocationBatch",
     "PlatformProfile",
     "DeploymentSpec", "SimClock", "FDNControlPlane", "AccessControl",
+    "AdmissionRequest", "AdmissionController", "QosSpec", "qos_id",
+    "QOS_LATENCY_CRITICAL", "QOS_STANDARD", "QOS_BATCH", "QOS_NAMES",
     "Gateway", "TargetPlatform", "ExecutionModel", "POLICIES",
     "PerformanceRankedPolicy", "UtilizationAwarePolicy",
     "RoundRobinCollaboration", "WeightedCollaboration",

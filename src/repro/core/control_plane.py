@@ -8,6 +8,7 @@ locally -> completion feeds Monitoring + Behavioral models + KnowledgeBase.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -38,6 +39,21 @@ class AccessControl:
 
     def check(self, principal: str, token: str) -> bool:
         return self._tokens.get(principal) == token
+
+
+@dataclass
+class AdmissionRequest:
+    """THE admission surface: every entry point — scalar ``submit``,
+    object-list ``submit_batch``, columnar ``_submit_columns`` — wraps
+    its arguments into one of these and hands it to
+    ``FDNControlPlane.admit``.  ``invs`` is either a sequence of
+    ``Invocation`` objects (a single invocation travels as a batch of
+    one) or an ``InvocationBatch``; QoS class and tenant ride the
+    invocations/columns themselves, so they enter the plane exactly
+    once, here."""
+
+    invs: Union[Sequence[Invocation], InvocationBatch]
+    platform_override: Optional[str] = None
 
 
 class FDNControlPlane:
@@ -77,6 +93,11 @@ class FDNControlPlane:
         # attach_telemetry — metrics-ingest and platform-health taps all
         # guard on it with one ``is None`` check
         self.telemetry = None
+        # QoS layer (repro.core.qos); None until attach_qos — the admit
+        # core consults the admission controller with one ``is None``
+        # check per request
+        self.qos = None
+        self.admission = None
         # retain_completions=False drops the per-invocation completed and
         # rejected lists (open-loop sinks own the samples; 10^6-invocation
         # scenarios must not retain a million Invocation objects here)
@@ -109,6 +130,8 @@ class FDNControlPlane:
         platform.on_fail.append(self._on_fail)
         platform.recorder = self.recorder
         platform.telemetry = self.telemetry
+        if self.qos is not None:
+            platform.set_qos(self.qos)
         self.detector.heartbeat(name)
         self._schedule_heartbeat(platform)
         if self.autoscaler is not None:
@@ -170,6 +193,51 @@ class FDNControlPlane:
 
     def submit(self, inv: Invocation,
                platform_override: Optional[str] = None) -> bool:
+        """Deprecated shim: wraps the invocation into an
+        ``AdmissionRequest`` batch of one and routes it through the
+        unified ``admit`` core.  Decisions, knowledge-base rows, hedge
+        timers and queue timings are byte-identical to the historical
+        scalar body (the parity tests pin batch-of-1 against sequential
+        submits).  Returns True iff the invocation was admitted
+        somewhere."""
+        return self.admit(AdmissionRequest((inv,), platform_override)) > 0
+
+    def admit(self, req: AdmissionRequest) -> int:
+        """THE admission core (every legacy entry point is a shim over
+        this): consult the QoS admission controller once — token
+        buckets, overload shed/degrade/spillover, brownout — then route
+        the survivors down the columnar or object path, and any
+        spillover rows to their override platform *after* the main
+        rows.  With no controller attached the gate costs one ``is
+        None`` check.  Returns the number of admitted invocations."""
+        invs = req.invs
+        columnar = isinstance(invs, InvocationBatch)
+        n = invs.n if columnar else len(invs)
+        if n == 0:
+            return 0
+        adm = self.admission
+        spill = None
+        if adm is not None:
+            if columnar:
+                invs, spill = adm.gate_columns(self, invs)
+            else:
+                invs, spill = adm.gate_objects(self, invs)
+        accepted = 0
+        if columnar:
+            if invs is not None and invs.n:
+                accepted = self._admit_columns(invs,
+                                               req.platform_override)
+        elif invs:
+            accepted = self._admit_objects(invs, req.platform_override)
+        if spill is not None:
+            accepted += self._admit_objects(spill[0], spill[1])
+        return accepted
+
+    def _admit_one(self, inv: Invocation,
+                   platform_override: Optional[str] = None) -> bool:
+        """Scalar admission body (the object path's batch-of-1 fast
+        path — same decisions as the grouped path, pinned by tests; no
+        grouping/snapshot overhead for closed-loop callers)."""
         self._record_arrival(inv, self.clock.now())
         if self.predictive_prewarm:
             self._maybe_prewarm(inv.fn)
@@ -229,11 +297,21 @@ class FDNControlPlane:
         logged rows match sequential submits row for row.  Returns the
         number of accepted invocations; rejected ones land in
         ``self.rejected``.
+
+        Deprecated shim: this is now a thin adapter over the unified
+        ``admit`` core (where QoS admission control runs once for every
+        entry point).
         """
-        if isinstance(invs, InvocationBatch):
-            return self._submit_columns(invs, platform_override)
-        if not invs:
-            return 0
+        return self.admit(AdmissionRequest(invs, platform_override))
+
+    def _admit_objects(self,
+                       invs: Sequence[Invocation],
+                       platform_override: Optional[str] = None) -> int:
+        """Object-path admission body (see ``submit_batch`` for the
+        grouped-decision semantics; ``admit`` has already run the QoS
+        gate by the time this is called)."""
+        if len(invs) == 1:
+            return 1 if self._admit_one(invs[0], platform_override) else 0
         now = self.clock.now()
         # one pass: distinct-function grouping (mirror of
         # scheduler.group_by_fn — identity-keyed, first-appearance order;
@@ -401,6 +479,12 @@ class FDNControlPlane:
 
     def _submit_columns(self, batch: InvocationBatch,
                         platform_override: Optional[str] = None) -> int:
+        """Deprecated shim over the unified ``admit`` core (kept because
+        callers and tests address the columnar path by this name)."""
+        return self.admit(AdmissionRequest(batch, platform_override))
+
+    def _admit_columns(self, batch: InvocationBatch,
+                       platform_override: Optional[str] = None) -> int:
         """Array-native ``submit_batch``: decide and route straight off
         the batch's columns.
 
@@ -418,8 +502,10 @@ class FDNControlPlane:
         if batch.n == 0:
             return 0
         if self.kb.log_decisions or self.hedge.enabled:
-            return self.submit_batch(batch.to_invocations(),
-                                     platform_override)
+            # object-path fallback must NOT re-enter admit(): the QoS
+            # gate already ran for these rows
+            return self._admit_objects(batch.to_invocations(),
+                                       platform_override)
         now = self.clock.now()
         specs = batch.specs
         fidx = batch.fn_idx
@@ -450,7 +536,7 @@ class FDNControlPlane:
                 invs = batch.to_invocations()
                 for inv in invs:        # bookkeeping already folded above
                     inv.arrival_recorded = True
-                return self.submit_batch(invs, platform_override)
+                return self._admit_objects(invs, platform_override)
             idx, ok = res
             plats = snap.platforms
             tmap = [plats[int(idx[g])] if ok[g] else None
@@ -588,6 +674,22 @@ class FDNControlPlane:
         for p in self.platforms.values():
             p.telemetry = engine
         return engine
+
+    def attach_qos(self, spec):
+        """Attach the QoS layer (repro.core.qos) plane-wide: one
+        ``AdmissionController`` gating the unified ``admit`` core
+        (per-class token buckets, overload shed/degrade/spillover,
+        brownout under an energy cap) and per-class DRR queues at every
+        platform — current and elastically joined later.  ``spec`` is a
+        ``QosSpec`` or its dict form.  Returns the controller."""
+        from repro.core.qos import AdmissionController, QosSpec
+        if isinstance(spec, dict):
+            spec = QosSpec.from_dict(spec)
+        self.qos = spec
+        self.admission = AdmissionController(spec, self.clock)
+        for p in self.platforms.values():
+            p.set_qos(spec)
+        return self.admission
 
     # ----------------------------------------------------------- chains ---
     def chain_executor(self, fns: Dict[str, FunctionSpec], **kw):

@@ -26,6 +26,27 @@ class Gateway:
         cp.access.grant(principal, token)
         self.principal, self.token = principal, token
         self.unauthorized = 0
+        # principal -> tenant id: multi-tenant ingress stamping (QoS
+        # layer); empty dict keeps both request paths at one falsy check
+        self.tenants: Dict[str, int] = {}
+
+    def set_tenant(self, principal: str, tenant: int):
+        """Map an authenticated principal to a tenant id: every
+        invocation arriving under that principal is stamped with the
+        tenant before admission (the per-tenant column the QoS fairness
+        and shed-rate report sections aggregate over)."""
+        self.tenants[principal] = int(tenant)
+
+    def _stamp_tenant(self, invs, principal: Optional[str]):
+        tenant = self.tenants.get(
+            principal if principal is not None else self.principal)
+        if tenant is None:
+            return
+        if isinstance(invs, InvocationBatch):
+            invs.tenant[:] = tenant
+        else:
+            for inv in invs:
+                inv.tenant = tenant
 
     def _authorized(self, principal: Optional[str],
                     token: Optional[str]) -> bool:
@@ -42,6 +63,8 @@ class Gateway:
             if rec is not None:
                 rec.record_reject(inv.fn.name, None, self.cp.clock.now(), 1)
             return False
+        if self.tenants:
+            self._stamp_tenant((inv,), principal)
         override = None
         if self.lb_policy is not None:
             target = self.lb_policy.choose(inv, self.cp.alive_platforms())
@@ -71,6 +94,8 @@ class Gateway:
                 rec.record_reject(None, None, self.cp.clock.now(),
                                   len(invs))
             return 0
+        if self.tenants:
+            self._stamp_tenant(invs, principal)
         if self.lb_policy is None:
             return self.cp.submit_batch(invs)
         if isinstance(invs, InvocationBatch):

@@ -2,14 +2,15 @@
 currency.
 
 An ``InvocationBatch`` carries an arrival burst as flat columns — function
-index, arrival timestamp, payload bytes, SLO deadline, admission state —
-over one shared list of distinct ``FunctionSpec``s.  The whole admission
-pipeline (gateway -> control plane -> sidecar -> platform queue) moves the
-columns; per-invocation ``Invocation`` objects materialize lazily, exactly
-when a replica actually starts one (or a fault / completion path needs the
-object form).  A trace replay therefore allocates Python objects
-proportional to *in-flight* work, not to arrivals, and a long stream can
-be walked as zero-copy chunk ``view``s over one preallocated column set.
+index, arrival timestamp, payload bytes, SLO deadline, QoS class, tenant,
+admission state — over one shared list of distinct ``FunctionSpec``s.  The
+whole admission pipeline (gateway -> control plane -> sidecar -> platform
+queue) moves the columns; per-invocation ``Invocation`` objects materialize
+lazily, exactly when a replica actually starts one (or a fault / completion
+path needs the object form).  A trace replay therefore allocates Python
+objects proportional to *in-flight* work, not to arrivals, and a long
+stream can be walked as zero-copy chunk ``view``s over one preallocated
+column set.
 """
 from __future__ import annotations
 
@@ -31,16 +32,20 @@ class InvocationBatch:
     * ``payload_bytes`` (f8) — request payload size (0 when unknown)
     * ``deadline_s`` (f8)  — per-arrival SLO budget (from the spec's SLO
       unless the caller supplies its own column)
+    * ``qos``     (int8)   — QoS class id (repro.core.qos; 1 == standard)
+    * ``tenant``  (int32)  — tenant id (0 == default tenant)
     * ``state``   (int8)   — PENDING / ADMITTED / REJECTED
     """
 
     PENDING, ADMITTED, REJECTED = 0, 1, 2
 
     __slots__ = ("specs", "fn_idx", "arrival_t", "payload_bytes",
-                 "deadline_s", "state", "n", "arrival_recorded", "_objs")
+                 "deadline_s", "state", "qos", "tenant", "n",
+                 "arrival_recorded", "_objs")
 
     def __init__(self, specs: Sequence[FunctionSpec], fn_idx, arrival_t,
-                 payload_bytes=None, deadline_s=None, state=None):
+                 payload_bytes=None, deadline_s=None, state=None,
+                 qos=None, tenant=None):
         self.specs: List[FunctionSpec] = \
             specs if isinstance(specs, list) else list(specs)
         self.fn_idx = np.asarray(fn_idx, np.int32)
@@ -57,6 +62,12 @@ class InvocationBatch:
         self.deadline_s = np.asarray(deadline_s, np.float64)
         self.state = np.zeros(n, np.int8) if state is None \
             else np.asarray(state, np.int8)
+        # 1 == standard (repro.core.qos.DEFAULT_QOS); kept literal so a
+        # qos-free caller never imports the qos module
+        self.qos = np.full(n, 1, np.int8) if qos is None \
+            else np.asarray(qos, np.int8)
+        self.tenant = np.zeros(n, np.int32) if tenant is None \
+            else np.asarray(tenant, np.int32)
         # set once the control plane has folded this batch's arrivals into
         # the rate/interaction models (mirrors Invocation.arrival_recorded)
         self.arrival_recorded = False
@@ -74,7 +85,9 @@ class InvocationBatch:
                                self.arrival_t[lo:hi],
                                self.payload_bytes[lo:hi],
                                self.deadline_s[lo:hi],
-                               self.state[lo:hi])
+                               self.state[lo:hi],
+                               qos=self.qos[lo:hi],
+                               tenant=self.tenant[lo:hi])
 
     # ------------------------------------------------- object round-trip --
     def materialize(self, i: int) -> Invocation:
@@ -83,7 +96,9 @@ class InvocationBatch:
         inv = self._objs.get(i)
         if inv is None:
             inv = Invocation(self.specs[self.fn_idx[i]],
-                             float(self.arrival_t[i]))
+                             float(self.arrival_t[i]),
+                             qos=int(self.qos[i]),
+                             tenant=int(self.tenant[i]))
             self._objs[i] = inv
         return inv
 
@@ -104,6 +119,8 @@ class InvocationBatch:
         smap: Dict[int, int] = {}
         fidx = np.empty(n, np.int32)
         arr = np.empty(n)
+        qos = np.empty(n, np.int8)
+        tenant = np.empty(n, np.int32)
         for i, inv in enumerate(invs):
             j = smap.get(id(inv.fn))
             if j is None:
@@ -112,7 +129,10 @@ class InvocationBatch:
                 specs.append(inv.fn)
             fidx[i] = j
             arr[i] = inv.arrival_t
-        b = cls(specs, fidx, arr, payload_bytes=payload_bytes)
+            qos[i] = inv.qos
+            tenant[i] = inv.tenant
+        b = cls(specs, fidx, arr, payload_bytes=payload_bytes,
+                qos=qos, tenant=tenant)
         b._objs = dict(enumerate(invs))
         return b
 

@@ -51,7 +51,8 @@ class LoadResult:
 def spawn_vus(clock: SimClock, submit: Callable[[Invocation], None],
               fn: FunctionSpec, vus: int, t_end: float,
               sleep_s: float = 0.0, seed: int = 42, jitter: float = 0.05,
-              out: Optional[List[Invocation]] = None) -> List[Invocation]:
+              out: Optional[List[Invocation]] = None,
+              qos: int = 1, tenant: int = 0) -> List[Invocation]:
     """Schedule `vus` virtual-user loops on the clock WITHOUT running it.
 
     Each VU iterates request -> wait-for-completion -> think-sleep until
@@ -64,7 +65,8 @@ def spawn_vus(clock: SimClock, submit: Callable[[Invocation], None],
     def vu_loop(vu_id: int):
         if clock.now() >= t_end:
             return
-        inv = Invocation(fn, clock.now(), vu=vu_id)
+        inv = Invocation(fn, clock.now(), vu=vu_id, qos=qos,
+                         tenant=tenant)
         invs.append(inv)
         done_flag = {"fired": False}
 
@@ -188,6 +190,8 @@ class ColumnarResultSink:
         self._fn = np.empty(capacity, np.int32)
         self._cold = np.empty(capacity, bool)
         self._inv = np.empty(capacity, np.int64)
+        self._qos = np.empty(capacity, np.int8)
+        self._tenant = np.empty(capacity, np.int32)
         self._platform_ids: Dict[str, int] = {}
         self._fn_ids: Dict[str, int] = {}
         self._fn_specs: Dict[str, FunctionSpec] = {}
@@ -198,7 +202,7 @@ class ColumnarResultSink:
     def _grow(self, need: int):
         cap = max(self._arrival.size * 2, need)
         for name in ("_arrival", "_end", "_exec", "_platform", "_fn",
-                     "_cold", "_inv"):
+                     "_cold", "_inv", "_qos", "_tenant"):
             a = getattr(self, name)
             b = np.empty(cap, a.dtype)
             b[:self._n] = a[:self._n]
@@ -223,6 +227,8 @@ class ColumnarResultSink:
         self._fn[i] = fid
         self._cold[i] = inv.cold_start
         self._inv[i] = inv.id
+        self._qos[i] = inv.qos
+        self._tenant[i] = inv.tenant
         self._n = i + 1
 
     @classmethod
@@ -244,6 +250,8 @@ class ColumnarResultSink:
         sink._fn[:n] = fn_idx
         sink._cold[:n] = cold if cold is not None else False
         sink._inv[:n] = np.arange(n, dtype=np.int64)   # synthetic ids
+        sink._qos[:n] = 1                              # standard class
+        sink._tenant[:n] = 0
         sink._platform_ids = {name: i for i, name in enumerate(platforms)}
         sink._fn_ids = {f.name: i for i, f in enumerate(fns)}
         sink._fn_specs = {f.name: f for f in fns}
@@ -270,7 +278,8 @@ class ColumnarResultSink:
         return {"arrival": self._arrival[:n], "end": self._end[:n],
                 "exec": self._exec[:n], "platform": self._platform[:n],
                 "fn": self._fn[:n], "cold": self._cold[:n],
-                "inv_id": self._inv[:n],
+                "inv_id": self._inv[:n], "qos": self._qos[:n],
+                "tenant": self._tenant[:n],
                 "platform_ids": dict(self._platform_ids),
                 "fn_ids": dict(self._fn_ids),
                 "fn_specs": dict(self._fn_specs)}
@@ -334,14 +343,20 @@ def schedule_arrival_mix(clock: SimClock,
                          specs: Sequence[FunctionSpec], times: np.ndarray,
                          fn_idx: np.ndarray, batch_window_s: float = 0.05,
                          sink: Optional[ColumnarResultSink] = None,
-                         columnar: bool = False) -> ColumnarResultSink:
+                         columnar: bool = False,
+                         qos: Optional[np.ndarray] = None,
+                         tenant: Optional[np.ndarray] = None
+                         ) -> ColumnarResultSink:
     """Enqueue a multi-function arrival stream WITHOUT running the clock.
 
     ``times`` is the merged, sorted admission stream; ``fn_idx[i]`` indexes
     ``specs`` for arrival i (a single-function stream is the all-zeros
-    case).  Arrivals inside one ``batch_window_s`` sub-window are admitted
-    together at the window's close; each invocation keeps its true arrival
-    timestamp, so measured response times include the admission delay.
+    case).  Optional ``qos`` / ``tenant`` columns (aligned with ``times``)
+    tag each arrival with its QoS class id and tenant; omitted they keep
+    the defaults (standard class, tenant 0).  Arrivals inside one
+    ``batch_window_s`` sub-window are admitted together at the window's
+    close; each invocation keeps its true arrival timestamp, so measured
+    response times include the admission delay.
 
     ``columnar=True`` builds ONE ``InvocationBatch`` over the whole stream
     and fires zero-copy chunk views per sub-window — no per-arrival
@@ -357,7 +372,8 @@ def schedule_arrival_mix(clock: SimClock,
     bounds = _burst_bounds(times, batch_window_s)
 
     if columnar:
-        stream = InvocationBatch(list(specs), fn_idx, times)
+        stream = InvocationBatch(list(specs), fn_idx, times,
+                                 qos=qos, tenant=tenant)
 
         def fire(lo: int, hi: int):
             chunk = stream.view(lo, hi)
@@ -366,7 +382,10 @@ def schedule_arrival_mix(clock: SimClock,
             sink.rejected += chunk.n - accepted
     else:
         def fire(lo: int, hi: int):
-            invs = [Invocation(specs[fn_idx[i]], float(times[i]))
+            invs = [Invocation(specs[fn_idx[i]], float(times[i]),
+                               qos=1 if qos is None else int(qos[i]),
+                               tenant=0 if tenant is None
+                               else int(tenant[i]))
                     for i in range(lo, hi)]
             sink.submitted += len(invs)
             accepted = submit_batch(invs)

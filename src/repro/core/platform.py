@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import qos as qos_mod
 from repro.core.data_placement import DataPlacementManager
 from repro.core.energy import EnergyMeter
 from repro.core.monitoring import MetricsRegistry
@@ -150,6 +151,15 @@ class TargetPlatform:
         # samples never walk the deque.
         self.telemetry = None
         self.queued_rows = 0
+        # QoS layer (repro.core.qos): per-class DRR queues, built by
+        # set_qos only for non-uniform weights — _cqueues is None keeps
+        # every enqueue/drain on the single-FIFO fast path (exact FIFO
+        # recovery AND zero qos-off cost)
+        self.qos: Optional[qos_mod.QosSpec] = None
+        self._cqueues: Optional[List[deque]] = None
+        self._crows: Optional[np.ndarray] = None
+        self._deficit: Optional[np.ndarray] = None
+        self._weights: Optional[np.ndarray] = None
         self.inflight: Dict[int, Invocation] = {}
         energy.register(prof, clock.now())
         self._idler_scheduled = False
@@ -187,6 +197,25 @@ class TargetPlatform:
             r.retired = True
         self._free.pop(fn_name, None)
         self._idle_counts.pop(fn_name, None)
+
+    # -------------------------------------------------------------- qos ---
+    def set_qos(self, spec: Optional["qos_mod.QosSpec"]):
+        """Attach per-class deficit-round-robin queueing.  Uniform
+        weights (or None) keep the single FIFO deque — DRR with equal
+        quanta *is* FIFO, so the recovery is structural and the qos-off
+        drain stays byte-identical."""
+        self.qos = spec
+        if spec is not None and spec.drr_enabled():
+            if self._cqueues is None:
+                self._cqueues = [deque() for _ in range(qos_mod.N_QOS)]
+                self._crows = np.zeros(qos_mod.N_QOS, np.int64)
+                self._deficit = np.zeros(qos_mod.N_QOS, np.int64)
+            self._weights = np.asarray(spec.weights, np.int64)
+        else:
+            self._cqueues = None
+            self._crows = None
+            self._deficit = None
+            self._weights = None
 
     # ------------------------------------------------------- accounting ---
     def busy_replicas(self) -> int:
@@ -296,6 +325,8 @@ class TargetPlatform:
         deployed = self.deployed
         inflight = self.inflight
         queue_append = self.queue.append
+        cq = self._cqueues
+        crows = self._crows
         pname = self.prof.name
         now = self.clock.now()
         counts = self.autoscale_counts
@@ -309,7 +340,11 @@ class TargetPlatform:
             inv.scheduled_t = now
             inv.status = "queued"
             inflight[inv.id] = inv
-            queue_append(inv)
+            if cq is None:
+                queue_append(inv)
+            else:
+                cq[inv.qos].append(inv)
+                crows[inv.qos] += 1
             self.queued_rows += 1
             if counts is not None:
                 counts[name] = counts.get(name, 0) + 1
@@ -354,7 +389,20 @@ class TargetPlatform:
                 if k:
                     name = specs[j].name
                     counts[name] = counts.get(name, 0) + int(k)
-        self.queue.append(_ColumnarEntry(batch, idxs, self.clock.now()))
+        cq = self._cqueues
+        if cq is None:
+            self.queue.append(_ColumnarEntry(batch, idxs, self.clock.now()))
+        else:
+            # split the group by class: one entry per class present, FIFO
+            # within class preserved (idxs are in admission order)
+            now = self.clock.now()
+            qcol = batch.qos[idxs]
+            crows = self._crows
+            for c in range(qos_mod.N_QOS):
+                sel = idxs[qcol == np.int8(c)]
+                if sel.size:
+                    cq[c].append(_ColumnarEntry(batch, sel, now))
+                    crows[c] += int(sel.size)
         self.queued_rows += int(idxs.size)
         self._drain()
         self._schedule_idler()
@@ -370,7 +418,11 @@ class TargetPlatform:
         inv.scheduled_t = self.clock.now()
         inv.status = "queued"
         self.inflight[inv.id] = inv
-        self.queue.append(inv)
+        if self._cqueues is None:
+            self.queue.append(inv)
+        else:
+            self._cqueues[inv.qos].append(inv)
+            self._crows[inv.qos] += 1
         self.queued_rows += 1
         counts = self.autoscale_counts
         if counts is not None:
@@ -411,6 +463,8 @@ class TargetPlatform:
         """Assign free/new replicas to the queue head (FIFO; stops at the
         first invocation that cannot start), then launch every assigned
         invocation in one vectorized pass."""
+        if self._cqueues is not None:
+            return self._drain_qos()
         queue = self.queue
         if queue and not self.failed:
             now = self.clock.now()
@@ -504,6 +558,131 @@ class TargetPlatform:
                 self._launch(starts, startups, colds, mem_at, exec_base,
                              data_ts, base_busy, now)
                 self.queued_rows -= len(starts)
+        self._touch_energy()
+        self._sample_infra()
+        tel = self.telemetry
+        if tel is not None:
+            self.sample_health(tel)
+
+    def _drain_qos(self):
+        """DRR twin of ``_drain``: the per-start body is identical (same
+        replica assignment, same hoisting, same ``_launch``), but the
+        serve *order* follows a vectorized deficit-round-robin plan over
+        the per-class queues — one ``np.lexsort`` per drain
+        (``qos.drr_plan``), deficits committed back afterwards
+        (``qos.drr_commit``).  Head-of-line blocking is global: the
+        first planned row that cannot start stops the drain, exactly
+        like the FIFO drain stops at its queue head."""
+        cq = self._cqueues
+        crows = self._crows
+        total_backlog = int(crows.sum())
+        if total_backlog and not self.failed:
+            now = self.clock.now()
+            prof = self.prof
+            # upper bound on possible starts this drain: every start
+            # either consumes a free replica or creates one (creation
+            # stops at total_replicas busy) — keeps the plan size
+            # proportional to serveable rows, not to the backlog
+            if prof.elastic:
+                cap = total_backlog
+            else:
+                cap = min(total_backlog, self._idle_total +
+                          max(0, prof.total_replicas - self._busy))
+            if cap > 0:
+                plan_cls, plan_rounds = qos_mod.drr_plan(
+                    crows, self._deficit, self._weights, cap)
+                base_busy = self._busy
+                starts: List[Tuple[Invocation, FunctionSpec, Replica]] = []
+                startups: List[float] = []
+                colds: List[bool] = []
+                mem_at: List[float] = []
+                exec_base: List[float] = []
+                data_ts: List[float] = []
+                hoist = self.placement is None or \
+                    not self.placement.cache_enabled
+                fn_cache: Dict[int, list] = {}
+                pname = prof.name
+                served = [0] * qos_mod.N_QOS
+                plan_len = int(plan_cls.size)
+                p = 0
+                while p < plan_len:
+                    c = int(plan_cls[p])
+                    queue = cq[c]
+                    head = queue[0]
+                    entry = head if type(head) is _ColumnarEntry else None
+                    if entry is not None:
+                        b = entry.batch
+                        i = int(entry.idxs[entry.pos])
+                        fn = b.specs[b.fn_idx[i]]
+                    else:
+                        fn = head.fn
+                    rep = self._find_replica(fn.name)
+                    if rep is None:
+                        if not self.can_start_replica(fn):
+                            break
+                        rep = Replica(fn.name, COLD)
+                        self.replicas[fn.name].append(rep)
+                        spec = self.deployed.get(fn.name)
+                        if spec is not None:
+                            self._mem_replicas_mb += spec.memory_mb
+                    if entry is None:
+                        inv = head
+                        queue.popleft()
+                    else:
+                        inv = b.materialize(i)
+                        inv.platform = pname
+                        inv.scheduled_t = entry.t
+                        inv.status = "queued"
+                        self.inflight[inv.id] = inv
+                        entry.pos += 1
+                        if entry.pos == entry.idxs.size:
+                            queue.popleft()
+                    state = rep.state
+                    if state == COLD:
+                        startups.append(prof.cold_start_s)
+                        colds.append(True)
+                    elif state == PREWARM:
+                        startups.append(prof.cold_start_s * 0.15)
+                        colds.append(False)
+                    else:
+                        startups.append(0.0)
+                        colds.append(False)
+                    rep.state = WARM
+                    rep.busy = True
+                    rep.last_used = now
+                    self._busy += 1
+                    mem_at.append(self._mem_replicas_mb)
+                    if hoist:
+                        cached = fn_cache.get(id(fn))
+                        if cached is None:
+                            e, d = self._fn_start_cost(fn)
+                            cached = [e, d, fn, 0]
+                            fn_cache[id(fn)] = cached
+                        cached[3] += 1
+                        e, d = cached[0], cached[1]
+                    else:
+                        e, d = self._fn_start_cost(fn)
+                        if self.placement is not None:
+                            for obj in fn.data_objects:
+                                self.placement.record_access(fn.name, obj)
+                    exec_base.append(e)
+                    data_ts.append(d)
+                    starts.append((inv, fn, rep))
+                    served[c] += 1
+                    p += 1
+                self._deficit = qos_mod.drr_commit(
+                    self._deficit, self._weights, crows, served,
+                    plan_cls, plan_rounds, p)
+                crows -= np.asarray(served, np.int64)
+                if starts:
+                    if hoist and self.placement is not None:
+                        for _e, _d, fn, count in fn_cache.values():
+                            for obj in fn.data_objects:
+                                self.placement.record_access(fn.name, obj,
+                                                             count=count)
+                    self._launch(starts, startups, colds, mem_at,
+                                 exec_base, data_ts, base_busy, now)
+                    self.queued_rows -= len(starts)
         self._touch_energy()
         self._sample_infra()
         tel = self.telemetry
@@ -759,15 +938,21 @@ class TargetPlatform:
         travel the same failure path (redelivery sees real objects)."""
         self.failed = True
         lost = list(self.inflight.values())
-        for head in self.queue:
-            if type(head) is _ColumnarEntry:
-                for i in head.idxs[head.pos:]:
-                    inv = head.batch.materialize(int(i))
-                    inv.platform = self.prof.name
-                    inv.scheduled_t = head.t
-                    lost.append(inv)
+        queues = [self.queue] if self._cqueues is None \
+            else [self.queue, *self._cqueues]
+        for q in queues:
+            for head in q:
+                if type(head) is _ColumnarEntry:
+                    for i in head.idxs[head.pos:]:
+                        inv = head.batch.materialize(int(i))
+                        inv.platform = self.prof.name
+                        inv.scheduled_t = head.t
+                        lost.append(inv)
         self.inflight.clear()
-        self.queue.clear()
+        for q in queues:
+            q.clear()
+        if self._crows is not None:
+            self._crows[:] = 0
         self.queued_rows = 0
         for inv in lost:
             self._fail(inv, "platform failure")
@@ -785,6 +970,9 @@ class TargetPlatform:
     def recover(self):
         self.failed = False
         self.queued_rows = 0
+        if self._crows is not None:
+            self._crows[:] = 0
+            self._deficit[:] = 0
         for rs in self.replicas.values():
             for r in rs:
                 r.retired = True

@@ -54,15 +54,20 @@ class Invocation:
     __slots__ = ("id", "fn", "arrival_t", "vu", "args", "platform",
                  "scheduled_t", "start_t", "end_t", "status", "cold_start",
                  "exec_time", "data_time", "queue_time", "hedged_from",
-                 "attempts", "arrival_recorded", "_on_done")
+                 "attempts", "arrival_recorded", "qos", "tenant",
+                 "_on_done")
 
     def __init__(self, fn: FunctionSpec, arrival_t: float, vu: int = 0,
-                 args: Any = None):
+                 args: Any = None, qos: int = 1, tenant: int = 0):
         self.id = next(_inv_counter)
         self.fn = fn
         self.arrival_t = arrival_t
         self.vu = vu
         self.args = args
+        # QoS class (repro.core.qos ids; 1 == standard) and tenant —
+        # literal defaults keep this module import-independent of qos
+        self.qos = qos
+        self.tenant = tenant
         self.platform: Optional[str] = None
         self.scheduled_t: Optional[float] = None
         self.start_t: Optional[float] = None

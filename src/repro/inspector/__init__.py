@@ -13,8 +13,10 @@ columnar replay of Azure-scale traces in bounded memory; ``registry`` —
 named scenarios: the paper's figures/tables re-expressed, plus mixes the
 hand-wired benchmarks could not express.
 """
-from repro.inspector.scenario import (SCHEMA_VERSION, FaultEvent, Scenario,
-                                      ScenarioReport, Workload, assemble,
+from repro.inspector.scenario import (SCHEMA_VERSION, AutoscaleSpec,
+                                      FaultEvent, Scenario,
+                                      ScenarioReport, ScenarioRun,
+                                      TracingSpec, Workload, assemble,
                                       build_report, run_scenario,
                                       run_scenario_state)
 from repro.inspector.streaming import StreamStats, stream_replay
@@ -26,9 +28,9 @@ from repro.inspector.traces import (WorkloadMix, build_arrivals,
 from repro.inspector import registry
 
 __all__ = [
-    "SCHEMA_VERSION", "FaultEvent", "Scenario", "ScenarioReport",
-    "Workload", "assemble", "build_report", "run_scenario",
-    "run_scenario_state",
+    "SCHEMA_VERSION", "AutoscaleSpec", "FaultEvent", "Scenario",
+    "ScenarioReport", "ScenarioRun", "TracingSpec", "Workload",
+    "assemble", "build_report", "run_scenario", "run_scenario_state",
     "StreamStats", "stream_replay",
     "WorkloadMix", "build_arrivals", "counts_to_arrivals",
     "diurnal_arrivals", "load_azure_invocations_csv", "mmpp_arrivals",

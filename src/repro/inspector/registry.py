@@ -557,6 +557,107 @@ def _with_telemetry(sc: Scenario, name: str) -> Scenario:
     return sc.replace(name=name, telemetry=dict(TELEMETRY_DEFAULTS))
 
 
+# ---------------------------------------------------------------------------
+# Per-tenant QoS + overload resilience (repro.core.qos): multi-class
+# mixes through the unified admission gate — DRR queue draining vs plain
+# FIFO, shed vs degrade vs spillover under an overload ramp, and a
+# brownout arm where an energy cap degrades the batch class first.  The
+# report gains a ``qos`` section (per-class/per-tenant stats, fairness
+# shares, admission counters); benchmarks/bench_qos.py asserts the
+# DRR-vs-FIFO A/B headline.
+# ---------------------------------------------------------------------------
+
+QOS_PAIR = ("cloud-cluster", "edge-cluster")
+
+# three tenants, three classes: interactive traffic that must stay fast,
+# a rampable standard stream, and throughput-oriented batch filler
+QOS_SPEC_BASE: Dict[str, object] = {
+    "weights": [8, 3, 1],
+    "slo_multipliers": [0.5, 1.0, 4.0],
+    "shed_queue_depth": 300,
+    "shed_hard_factor": 2.0,
+}
+
+
+def _qos_mix(ramp_end_rps: float) -> tuple:
+    return (
+        Workload("nodeinfo", qos_class="latency_critical", tenant=1,
+                 arrival={"kind": "poisson", "rps": 25.0}),
+        Workload("sentiment-analysis", qos_class="standard", tenant=2,
+                 arrival={"kind": "ramp", "start_rps": 5.0,
+                          "end_rps": ramp_end_rps}),
+        Workload("JSON-loads", qos_class="batch", tenant=3,
+                 arrival={"kind": "poisson", "rps": 40.0}),
+    )
+
+
+def qos_overload(action: str, duration_s: float = 120.0) -> Scenario:
+    """Shed / degrade / spillover A/B: the ``ramp/overload`` pressure
+    pattern re-run with three tenants in three classes, identical except
+    for the admission controller's overload action."""
+    spec = dict(QOS_SPEC_BASE)
+    spec["overload_action"] = action
+    return Scenario(
+        name=f"qos/overload-{action}",
+        platforms=QOS_PAIR,
+        workloads=_qos_mix(120.0),
+        duration_s=duration_s,
+        slo_overrides={"sentiment-analysis": 2.0},
+        qos=spec)
+
+
+def qos_burst_storm(drr: bool, duration_s: float = 120.0) -> Scenario:
+    """DRR-vs-FIFO A/B under an MMPP burst storm: same three-class mix,
+    same admission spec, but the FIFO arm runs uniform weights — which
+    structurally disables the per-class queues (every enqueue stays on
+    the single-FIFO fast path), so the only difference is drain order."""
+    spec = dict(QOS_SPEC_BASE)
+    spec.pop("shed_queue_depth")       # isolate drain order from shedding
+    if not drr:
+        spec["weights"] = [1, 1, 1]
+    arm = "drr" if drr else "fifo"
+    return Scenario(
+        name=f"qos/burst-storm-{arm}",
+        platforms=QOS_PAIR,
+        workloads=(
+            Workload("nodeinfo", qos_class="latency_critical", tenant=1,
+                     arrival={"kind": "mmpp", "base_rps": 20.0,
+                              "burst_rps": 150.0, "mean_quiet_s": 15.0,
+                              "mean_burst_s": 3.0}),
+            Workload("sentiment-analysis", qos_class="standard", tenant=2,
+                     arrival={"kind": "poisson", "rps": 20.0}),
+            Workload("JSON-loads", qos_class="batch", tenant=3,
+                     arrival={"kind": "mmpp", "base_rps": 30.0,
+                              "burst_rps": 300.0, "mean_quiet_s": 20.0,
+                              "mean_burst_s": 3.0}),
+        ),
+        duration_s=duration_s,
+        qos=spec)
+
+
+def qos_brownout(duration_s: float = 120.0) -> Scenario:
+    """Brownout: a fleet-power cap trips mid-ramp and the controller
+    sheds the batch class first, keeping interactive tenants served
+    while total watts stay bounded."""
+    spec = dict(QOS_SPEC_BASE)
+    spec.pop("shed_queue_depth")       # brownout is the only shedder here
+    spec["energy_cap_w"] = 135.0
+    return Scenario(
+        name="qos/brownout-energy-cap",
+        platforms=QOS_PAIR,
+        workloads=_qos_mix(90.0),
+        duration_s=duration_s,
+        slo_overrides={"sentiment-analysis": 2.0},
+        qos=spec)
+
+
+for _action in ("shed", "degrade", "spillover"):
+    register(f"qos/overload-{_action}",
+             lambda a=_action: qos_overload(a))
+register("qos/burst-storm-drr", lambda: qos_burst_storm(True))
+register("qos/burst-storm-fifo", lambda: qos_burst_storm(False))
+register("qos/brownout-energy-cap", qos_brownout)
+
 register("telemetry/hpc-outage",
          lambda: _with_telemetry(platform_outage(),
                                  "telemetry/hpc-outage"))

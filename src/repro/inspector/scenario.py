@@ -19,14 +19,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from dataclasses import InitVar, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core import functions as fn_mod
 from repro.core import profiles as prof_mod
 from repro.core.control_plane import FDNControlPlane
+from repro.core.qos import N_QOS, QOS_NAMES, QosSpec, qos_id
 from repro.core.gateway import Gateway
 from repro.core.loadgen import (ColumnarResultSink, attach_completion_hooks,
                                 schedule_arrival_mix, spawn_vus)
@@ -68,7 +69,12 @@ class Workload:
     ``mode="chain"``: ``chain`` names a ``repro.chains.catalog`` template;
     each arrival launches one chain instance, planned once per workload by
     the data-gravity planner in ``plan_mode`` and reported under
-    ``label`` (default ``"<chain>@<plan_mode>"``)."""
+    ``label`` (default ``"<chain>@<plan_mode>"``).
+
+    ``qos_class`` / ``tenant`` tag every invocation of the stream with a
+    QoS class (``latency_critical`` | ``standard`` | ``batch``) and a
+    tenant id — the columns the DRR queues drain by and the report's
+    fairness sections aggregate over."""
     function: str = ""
     mode: str = "open"                       # "open" | "closed" | "chain"
     arrival: Optional[Dict[str, Any]] = None
@@ -78,6 +84,8 @@ class Workload:
     chain: Optional[str] = None              # chains.catalog name
     plan_mode: str = "auto"                  # chains.planner.PLAN_MODES
     label: Optional[str] = None              # per_chain report key
+    qos_class: str = "standard"              # repro.core.qos class name
+    tenant: int = 0
 
     def __post_init__(self):
         if self.mode == "chain":
@@ -87,6 +95,7 @@ class Workload:
         elif not self.function:
             raise ValueError(
                 f"{self.mode!r} workload needs a function name")
+        qos_id(self.qos_class)               # validate early
 
 
 @dataclass(frozen=True)
@@ -95,6 +104,37 @@ class FaultEvent:
     t: float
     platform: str
     action: str                              # "fail" | "recover"
+
+
+@dataclass(frozen=True)
+class TracingSpec:
+    """Typed form of the flight-recorder knobs (``trace`` /
+    ``trace_sample``).  Passed as ``Scenario(tracing=...)`` it normalizes
+    into the flat fields, so the serialized spec — and every golden —
+    stays byte-identical with the legacy constructor."""
+    enabled: bool = True
+    sample: float = 1.0
+
+
+@dataclass(frozen=True)
+class AutoscaleSpec:
+    """Typed form of the ``autoscale`` config dict (policy, tick, backend,
+    policy kwargs).  ``to_dict`` emits exactly the keys ``assemble``
+    consumes, omitting unset ones so the scenario echo matches a
+    hand-written dict."""
+    policy: str = "predictive"
+    tick_s: float = 1.0
+    backend: Optional[str] = None
+    policy_kwargs: Optional[Dict[str, Any]] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"policy": self.policy,
+                               "tick_s": float(self.tick_s)}
+        if self.backend is not None:
+            out["backend"] = self.backend
+        if self.policy_kwargs is not None:
+            out["policy_kwargs"] = dict(self.policy_kwargs)
+        return out
 
 
 @dataclass(frozen=True)
@@ -151,6 +191,29 @@ class Scenario:
     # dict mixing TelemetryConfig and AlertConfig keys (each picks the
     # keys it knows), or None to leave the engine off
     telemetry: Optional[Dict[str, Any]] = None
+    # per-tenant QoS + overload resilience (repro.core.qos): a QosSpec or
+    # its dict form — class weights (DRR queue draining), per-class SLO
+    # multipliers, token-bucket rate limits, load-shedding / brownout
+    # thresholds.  None leaves admission and queues exactly as before
+    qos: Optional[Union[QosSpec, Dict[str, Any]]] = None
+    # typed-spec constructor aliases (normalized into the flat fields
+    # above, so the serialized spec and goldens are identical either way)
+    tracing: InitVar[Optional[TracingSpec]] = None
+    autoscaling: InitVar[Optional[AutoscaleSpec]] = None
+
+    def __post_init__(self, tracing: Optional[TracingSpec],
+                      autoscaling: Optional[AutoscaleSpec]):
+        if tracing is not None:
+            object.__setattr__(self, "trace", bool(tracing.enabled))
+            object.__setattr__(self, "trace_sample",
+                               float(tracing.sample))
+        if autoscaling is not None:
+            object.__setattr__(self, "autoscale", autoscaling.to_dict())
+        if isinstance(self.qos, QosSpec):
+            object.__setattr__(self, "qos", self.qos.to_dict())
+
+    def qos_spec(self) -> Optional[QosSpec]:
+        return None if self.qos is None else QosSpec.from_dict(self.qos)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -256,6 +319,10 @@ def assemble(sc: Scenario):
             TelemetryEngine(TelemetryConfig.from_dict(sc.telemetry)))
         for fn in fns.values():
             engine.set_slo(fn.name, fn.slo.p90_response_s)
+    if sc.qos is not None:
+        # after telemetry: the admission controller's burn-rate overload
+        # signal reads cp.telemetry rollups when configured
+        cp.attach_qos(sc.qos_spec())
     attach_completion_hooks(cp)
     gw = Gateway(cp)
     if sc.lb_policy is not None:
@@ -286,6 +353,10 @@ class ScenarioReport:
     # telemetry runs only: rollup summary, burn-rate SLO alert events and
     # platform-health anomalies (repro.obs.telemetry / repro.obs.alerts)
     alerts: Dict[str, Any] = field(default_factory=dict)
+    # QoS runs only: per-class / per-tenant latency + class-adjusted SLO
+    # stats, DRR fairness shares and the admission controller's shed /
+    # degrade / spillover / brownout counters (repro.core.qos)
+    qos: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -347,6 +418,14 @@ class ScenarioReport:
             for k in ("enabled", "rollup", "slo", "health"):
                 if k not in al:
                     raise ValueError(f"alerts missing {k!r}")
+        # qos is additive too ({} when no QosSpec is attached)
+        q = d.get("qos", {})
+        if not isinstance(q, dict):
+            raise ValueError("qos must be a dict")
+        if q:
+            for k in ("per_class", "per_tenant", "fairness", "admission"):
+                if k not in q:
+                    raise ValueError(f"qos missing {k!r}")
 
 
 def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
@@ -364,14 +443,48 @@ def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
 # Runner
 # ---------------------------------------------------------------------------
 
+class ScenarioRun:
+    """Everything behind a scenario run, by name: ``.report``,
+    ``.control_plane``, ``.sink``, plus the attached ``.telemetry`` engine
+    and flight ``.recorder`` (None when the scenario left them off).
+
+    Iterates and indexes as the historical ``(report, control_plane,
+    sink)`` 3-tuple, so ``report, cp, sink = run_scenario_state(sc)`` and
+    ``run_scenario_state(sc)[0]`` keep working unchanged."""
+
+    __slots__ = ("report", "control_plane", "sink", "telemetry",
+                 "recorder")
+
+    def __init__(self, report: ScenarioReport, control_plane:
+                 FDNControlPlane, sink: ColumnarResultSink):
+        self.report = report
+        self.control_plane = control_plane
+        self.sink = sink
+        self.telemetry = control_plane.telemetry
+        self.recorder = control_plane.recorder
+
+    def _as_tuple(self):
+        return (self.report, self.control_plane, self.sink)
+
+    def __iter__(self):
+        return iter(self._as_tuple())
+
+    def __getitem__(self, i):
+        return self._as_tuple()[i]
+
+    def __len__(self) -> int:
+        return 3
+
+
 def run_scenario(sc: Scenario) -> ScenarioReport:
-    return run_scenario_state(sc)[0]
+    return run_scenario_state(sc).report
 
 
-def run_scenario_state(sc: Scenario):
-    """``run_scenario`` returning ``(report, control_plane, sink)`` — for
-    callers (fig6/fig8 benchmarks, tests) that need the metric series or
-    platform state behind the report, not just the canonical summary."""
+def run_scenario_state(sc: Scenario) -> "ScenarioRun":
+    """``run_scenario`` returning a ``ScenarioRun`` — for callers (fig6/
+    fig8 benchmarks, tests) that need the metric series or platform state
+    behind the report, not just the canonical summary.  Unpacks as the
+    legacy ``(report, control_plane, sink)`` tuple."""
     cp, gw, fns, sink = assemble(sc)
     clock = cp.clock
 
@@ -401,14 +514,16 @@ def run_scenario_state(sc: Scenario):
         if w.mode == "closed":
             spawn_vus(clock, submit, fns[w.function], w.vus,
                       t_end=sc.duration_s, sleep_s=w.sleep_s,
-                      seed=stream_seed, jitter=w.jitter, out=closed_out)
+                      seed=stream_seed, jitter=w.jitter, out=closed_out,
+                      qos=qos_id(w.qos_class), tenant=w.tenant)
         elif w.mode == "open":
             if w.arrival is None:
                 raise ValueError(f"open workload {w.function!r} "
                                  "needs an arrival spec")
             mix.add(w.function,
                     traces.build_arrivals(w.arrival, sc.duration_s,
-                                          seed=stream_seed))
+                                          seed=stream_seed),
+                    qos=qos_id(w.qos_class), tenant=w.tenant)
         elif w.mode == "chain":
             if w.chain is None or w.arrival is None:
                 raise ValueError("chain workload needs a chain name and "
@@ -433,10 +548,11 @@ def run_scenario_state(sc: Scenario):
         else:
             raise ValueError(f"unknown workload mode {w.mode!r}")
 
-    times, fn_idx, names = mix.merge()
+    times, fn_idx, names, qos_col, tenant_col = mix.merge_tagged()
     specs = [fns[n] for n in names]
     schedule_arrival_mix(clock, submit_batch, specs, times, fn_idx,
-                         sc.batch_window_s, sink, columnar=sc.columnar)
+                         sc.batch_window_s, sink, columnar=sc.columnar,
+                         qos=qos_col, tenant=tenant_col)
 
     t_end = max(sc.duration_s,
                 float(times[-1]) if times.size else 0.0,
@@ -454,7 +570,7 @@ def run_scenario_state(sc: Scenario):
     report = build_report(sc, cp, fns, sink,
                           closed_submitted=len(closed_out),
                           chain_exec=chain_exec)
-    return report, cp, sink
+    return ScenarioRun(report, cp, sink)
 
 
 def build_report(sc: Scenario, cp: FDNControlPlane, fns,
@@ -572,10 +688,70 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         alerts = alerts_section(cp.telemetry, sorted(fns),
                                 AlertConfig.from_dict(sc.telemetry or {}))
 
+    qos_section: Dict[str, Any] = {}
+    qspec = sc.qos_spec()
+    if qspec is not None:
+        qos_section = _qos_section(qspec, cp, cols, rt, slo_by_fid,
+                                   sc.duration_s)
+
     return ScenarioReport(schema_version=SCHEMA_VERSION,
                           scenario=sc.to_dict(), totals=totals,
                           per_platform=per_platform,
                           per_function=per_function,
                           per_chain=per_chain,
                           latency_breakdown=latency_breakdown,
-                          alerts=alerts)
+                          alerts=alerts,
+                          qos=qos_section)
+
+
+def _qos_section(spec: QosSpec, cp: FDNControlPlane,
+                 cols: Dict[str, Any], rt: np.ndarray,
+                 slo_by_fid: np.ndarray,
+                 duration_s: float) -> Dict[str, Any]:
+    """Per-class / per-tenant latency and class-adjusted SLO stats.
+
+    A class's effective deadline is the function SLO scaled by its
+    multiplier (latency_critical tightens it, batch relaxes it), so the
+    violation counts here answer "did each class meet *its own* bar",
+    not the flat per-function question ``totals`` already answers."""
+    qcol, tcol, fn_col = cols["qos"], cols["tenant"], cols["fn"]
+    mults = np.asarray(spec.slo_multipliers, np.float64)
+    adj_violated = (rt > slo_by_fid[fn_col] * mults[qcol]) if rt.size \
+        else np.empty(0, bool)
+    total = max(int(rt.size), 1)
+
+    per_class: Dict[str, Dict[str, Any]] = {}
+    share: Dict[str, float] = {}
+    for c in range(N_QOS):
+        mask = qcol == c
+        n = int(mask.sum())
+        stats = _pct_stats(rt[mask], duration_s)
+        n_viol = int(adj_violated[mask].sum())
+        stats["slo_multiplier"] = float(mults[c])
+        stats["slo_violations"] = n_viol
+        stats["slo_violation_rate"] = n_viol / n if n else 0.0
+        stats["weight"] = int(spec.weights[c])
+        stats["served_share"] = n / total
+        per_class[QOS_NAMES[c]] = stats
+        share[QOS_NAMES[c]] = n / total
+
+    per_tenant: Dict[str, Dict[str, Any]] = {}
+    for t in (np.unique(tcol) if tcol.size else ()):
+        mask = tcol == t
+        n = int(mask.sum())
+        per_tenant[str(int(t))] = {
+            "completed": n,
+            "served_share": n / total,
+            "p99_s": percentile_unsorted(rt[mask], 0.99),
+            "slo_violations": int(adj_violated[mask].sum()),
+        }
+
+    adm = cp.admission.section() if cp.admission is not None else {}
+    return {
+        "per_class": per_class,
+        "per_tenant": per_tenant,
+        "fairness": {"weights": [int(w) for w in spec.weights],
+                     "drr_enabled": spec.drr_enabled(),
+                     "served_share": share},
+        "admission": adm,
+    }

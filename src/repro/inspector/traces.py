@@ -215,32 +215,43 @@ class WorkloadMix:
     timestamps, a parallel index into ``names`` per arrival, and the
     distinct function names in first-added order.  The sort is stable, so
     simultaneous arrivals keep stream-insertion order; per-function counts
-    are preserved exactly."""
+    are preserved exactly.  Streams may be tagged with a QoS class and a
+    tenant; ``merge_tagged`` additionally returns the per-arrival qos /
+    tenant columns aligned with ``times``."""
 
     def __init__(self):
-        self._streams: List[Tuple[str, np.ndarray]] = []
+        self._streams: List[Tuple[str, np.ndarray, int, int]] = []
 
-    def add(self, fn_name: str, arrivals: np.ndarray) -> "WorkloadMix":
+    def add(self, fn_name: str, arrivals: np.ndarray,
+            qos: int = 1, tenant: int = 0) -> "WorkloadMix":
         self._streams.append((fn_name,
-                              np.asarray(arrivals, dtype=float)))
+                              np.asarray(arrivals, dtype=float),
+                              int(qos), int(tenant)))
         return self
 
     def counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
-        for name, arr in self._streams:
+        for name, arr, _q, _t in self._streams:
             out[name] = out.get(name, 0) + int(arr.size)
         return out
 
     @property
     def total(self) -> int:
-        return sum(arr.size for _, arr in self._streams)
+        return sum(arr.size for _, arr, _q, _t in self._streams)
 
     def merge(self) -> Tuple[np.ndarray, np.ndarray, List[str]]:
+        times, idx, names, _qos, _tenant = self.merge_tagged()
+        return times, idx, names
+
+    def merge_tagged(self) -> Tuple[np.ndarray, np.ndarray, List[str],
+                                    np.ndarray, np.ndarray]:
         names: List[str] = []
         ids: Dict[str, int] = {}
         times_parts: List[np.ndarray] = []
         idx_parts: List[np.ndarray] = []
-        for name, arr in self._streams:
+        qos_parts: List[np.ndarray] = []
+        ten_parts: List[np.ndarray] = []
+        for name, arr, q, t in self._streams:
             fid = ids.get(name)
             if fid is None:
                 fid = len(names)
@@ -248,9 +259,15 @@ class WorkloadMix:
                 names.append(name)
             times_parts.append(arr)
             idx_parts.append(np.full(arr.size, fid, np.int64))
+            qos_parts.append(np.full(arr.size, q, np.int8))
+            ten_parts.append(np.full(arr.size, t, np.int32))
         if not times_parts:
-            return np.empty(0), np.empty(0, np.int64), names
+            return (np.empty(0), np.empty(0, np.int64), names,
+                    np.empty(0, np.int8), np.empty(0, np.int32))
         times = np.concatenate(times_parts)
         idx = np.concatenate(idx_parts)
+        qos = np.concatenate(qos_parts)
+        tenant = np.concatenate(ten_parts)
         order = np.argsort(times, kind="stable")
-        return times[order], idx[order], names
+        return (times[order], idx[order], names,
+                qos[order], tenant[order])

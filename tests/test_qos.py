@@ -1,0 +1,458 @@
+"""Per-tenant QoS layer: DRR scalar/vectorized parity (hypothesis),
+no-starvation and FIFO-recovery guarantees, platform drain integration,
+admission-controller behavior (token buckets, shed / degrade / spillover
+/ brownout), the unified ``admit()`` entry point, and the Scenario /
+ScenarioRun API compatibility shims."""
+import numpy as np
+import pytest
+
+from repro.core import (AdmissionRequest, FDNControlPlane, Invocation,
+                        QosSpec, profiles, qos_id)
+from repro.core import functions
+from repro.core.invocation_batch import InvocationBatch
+from repro.core.loadgen import ColumnarResultSink, attach_completion_hooks
+from repro.core.qos import (N_QOS, QOS_BATCH, QOS_LATENCY_CRITICAL,
+                            QOS_STANDARD, AdmissionController, TokenBuckets,
+                            drr_commit, drr_drain_scalar, drr_plan)
+from repro.core.types import DeploymentSpec
+
+try:                 # hypothesis is an optional test extra; without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the seeded exhaustive sweeps below still run
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **kw):
+        return lambda fn: pytest.mark.skip("hypothesis not installed")(fn)
+
+    def settings(*a, **kw):
+        return lambda fn: fn
+
+    class st:        # placeholder strategies so decorators still build
+        @staticmethod
+        def _none(*a, **kw):
+            return None
+        integers = lists = tuples = _none
+
+SETTINGS = dict(max_examples=200, deadline=None)
+
+
+def _vectorized_drain(backlogs, deficits, weights, capacity):
+    """Serve order + final deficits via the vectorized plan/commit pair,
+    mirroring what ``_drain_qos`` does."""
+    b = np.asarray(backlogs, np.int64)
+    d = np.asarray(deficits, np.int64)
+    w = np.asarray(weights, np.int64)
+    plan_cls, plan_rounds = drr_plan(b, d, w, capacity)
+    n = min(int(plan_cls.size), int(capacity), int(b.sum()))
+    served = np.bincount(plan_cls[:n], minlength=len(b))
+    final = drr_commit(d, w, b, served, plan_cls, plan_rounds, n)
+    return plan_cls[:n].tolist(), final.tolist()
+
+
+drr_case = st.tuples(
+    st.lists(st.integers(0, 40), min_size=N_QOS, max_size=N_QOS),
+    st.lists(st.integers(0, 6), min_size=N_QOS, max_size=N_QOS),
+    st.lists(st.integers(1, 9), min_size=N_QOS, max_size=N_QOS),
+    st.integers(0, 120),
+)
+
+
+def _assert_drr_parity(backlogs, deficits, weights, capacity):
+    # scalar reference never starts with credit on an empty class
+    deficits = [d if b else 0 for d, b in zip(deficits, backlogs)]
+    ref_order, ref_def = drr_drain_scalar(backlogs, deficits, weights,
+                                          capacity)
+    vec_order, vec_def = _vectorized_drain(backlogs, deficits, weights,
+                                           capacity)
+    assert vec_order == ref_order
+    assert vec_def == ref_def
+
+
+@given(drr_case)
+@settings(**SETTINGS)
+def test_drr_vectorized_matches_scalar(case):
+    _assert_drr_parity(*case)
+
+
+def test_drr_vectorized_matches_scalar_seeded_sweep():
+    """Always-on twin of the hypothesis parity test: 2000 seeded random
+    (backlogs, deficits, weights, capacity) cases, plus the boundary
+    cases the closed-form plan is most likely to get wrong (capacity on
+    a quantum edge, zero capacity, one-class-only backlogs)."""
+    rng = np.random.default_rng(1234)
+    for _ in range(2000):
+        backlogs = rng.integers(0, 40, N_QOS).tolist()
+        deficits = rng.integers(0, 7, N_QOS).tolist()
+        weights = rng.integers(1, 10, N_QOS).tolist()
+        capacity = int(rng.integers(0, 121))
+        _assert_drr_parity(backlogs, deficits, weights, capacity)
+    for cap in range(0, 22):             # quantum-edge capacities
+        _assert_drr_parity([10, 10, 10], [0, 0, 0], [4, 2, 1], cap)
+        _assert_drr_parity([0, 30, 0], [0, 3, 0], [4, 2, 1], cap)
+        _assert_drr_parity([1, 1, 25], [2, 1, 0], [2, 2, 5], cap)
+
+
+@given(st.lists(st.integers(1, 9), min_size=N_QOS, max_size=N_QOS),
+       st.integers(1, 30))
+@settings(**SETTINGS)
+def test_drr_no_starvation_when_saturated(weights, rounds):
+    """With every class backlogged past capacity, class c's share of a
+    drain of S rows is within one quantum of w_c/W — no class starves
+    however its competitors are weighted."""
+    W = sum(weights)
+    capacity = rounds * W
+    backlogs = [capacity] * N_QOS
+    order, _ = drr_drain_scalar(backlogs, [0] * N_QOS, weights, capacity)
+    assert len(order) == capacity
+    for c, w in enumerate(weights):
+        assert order.count(c) >= w * (capacity // W) - w
+        assert order.count(c) <= w * (capacity // W) + w
+
+
+@given(st.lists(st.integers(0, 40), min_size=N_QOS, max_size=N_QOS),
+       st.integers(1, 9), st.integers(0, 120))
+@settings(**SETTINGS)
+def test_drr_uniform_weights_serve_all_classes_evenly(backlogs, w, cap):
+    """Equal weights degrade DRR to per-round round-robin: every
+    backlogged class is served within one row of every other (until its
+    backlog runs out) — the fairness face of FIFO recovery.  The
+    *structural* recovery (uniform weights never build per-class queues
+    at all) is asserted in test_platform_fifo_recovery_structural."""
+    order, _ = drr_drain_scalar(backlogs, [0] * N_QOS, [w] * N_QOS, cap)
+    served = [order.count(c) for c in range(N_QOS)]
+    expect = min(cap, sum(backlogs))
+    assert sum(served) == expect
+    for c in range(N_QOS):
+        fully_drained = served[c] == backlogs[c]
+        for c2 in range(N_QOS):
+            if not fully_drained and served[c2] > served[c]:
+                assert served[c2] - served[c] <= w
+
+
+def test_drr_fairness_bounds_seeded_sweep():
+    """Always-on twins of the two hypothesis fairness properties."""
+    rng = np.random.default_rng(7)
+    for _ in range(300):
+        weights = rng.integers(1, 10, N_QOS).tolist()
+        W = sum(weights)
+        capacity = int(rng.integers(1, 31)) * W
+        order, _ = drr_drain_scalar([capacity] * N_QOS, [0] * N_QOS,
+                                    weights, capacity)
+        assert len(order) == capacity
+        for c, w in enumerate(weights):
+            assert abs(order.count(c) - w * (capacity // W)) <= w
+    for _ in range(300):
+        backlogs = rng.integers(0, 40, N_QOS).tolist()
+        w = int(rng.integers(1, 10))
+        cap = int(rng.integers(0, 121))
+        order, _ = drr_drain_scalar(backlogs, [0] * N_QOS,
+                                    [w] * N_QOS, cap)
+        served = [order.count(c) for c in range(N_QOS)]
+        assert sum(served) == min(cap, sum(backlogs))
+        for c in range(N_QOS):
+            if served[c] == backlogs[c]:
+                continue
+            for c2 in range(N_QOS):
+                if served[c2] > served[c]:
+                    assert served[c2] - served[c] <= w
+
+
+# ---------------------------------------------------------------- platform --
+
+def _build_cp(names=("cloud-cluster",), **cp_kw):
+    cp = FDNControlPlane(**cp_kw)
+    for n in names:
+        cp.create_platform(profiles.PAPER_PLATFORMS[n])
+    fns = {k: f.replace(real_fn=None)
+           for k, f in functions.paper_functions().items()}
+    functions.seed_object_stores(cp.placement, location=names[0])
+    cp.deploy(DeploymentSpec("t", list(fns.values()), list(cp.platforms)))
+    attach_completion_hooks(cp)
+    return cp, fns
+
+
+def test_platform_drain_matches_scalar_reference():
+    """A backlogged DRR platform serves per-class counts and commits
+    deficits exactly as the scalar oracle with capacity = rows served."""
+    spec = QosSpec(weights=(4, 2, 1))
+    cp, fns = _build_cp()
+    cp.attach_qos(spec)
+    p = cp.platforms["cloud-cluster"]
+    fn = fns["nodeinfo"]
+    backlogs = (11, 7, 9)
+    invs = []
+    for c, n in enumerate(backlogs):
+        for _ in range(n):
+            invs.append(Invocation(fn, 0.0, qos=c))
+    accepted = cp.submit_batch(invs)     # enqueues AND drains once
+    assert accepted == sum(backlogs)
+    served = [b - int(r) for b, r in zip(backlogs, p._crows)]
+    n_served = sum(served)
+    assert 0 < n_served < sum(backlogs)  # finite replicas: partial drain
+    ref_order, ref_def = drr_drain_scalar(backlogs, [0] * N_QOS,
+                                          spec.weights, n_served)
+    assert served == [ref_order.count(c) for c in range(N_QOS)]
+    assert [int(x) for x in p._deficit] == ref_def
+
+
+def test_platform_fifo_recovery_structural():
+    """Uniform weights never build per-class queues: every enqueue and
+    drain stays on the single-FIFO fast path, so qos-off behavior (and
+    its goldens) is recovered exactly, not approximately."""
+    cp, fns = _build_cp()
+    p = cp.platforms["cloud-cluster"]
+    cp.attach_qos(QosSpec(weights=(1, 1, 1)))
+    assert p._cqueues is None and p._deficit is None
+    cp.attach_qos(QosSpec(weights=(5, 5, 5)))
+    assert p._cqueues is None
+    cp.attach_qos(QosSpec(weights=(4, 2, 1)))
+    assert p._cqueues is not None and len(p._cqueues) == N_QOS
+
+
+def test_platform_fail_flushes_class_queues():
+    cp, fns = _build_cp()
+    cp.attach_qos(QosSpec(weights=(4, 2, 1)))
+    p = cp.platforms["cloud-cluster"]
+    invs = [Invocation(fns["nodeinfo"], 0.0, qos=c % 3) for c in range(30)]
+    cp.submit_batch(invs)
+    assert int(p._crows.sum()) > 0 or p.queued_rows >= 0
+    p.fail()
+    assert int(p._crows.sum()) == 0
+    assert all(not q for q in p._cqueues)
+    p.recover()
+    assert int(p._deficit.sum()) == 0
+
+
+# ------------------------------------------------------- token buckets -----
+
+def test_token_buckets_rate_and_burst():
+    tb = TokenBuckets([10.0, None, 1.0], [5.0, 5.0, 2.0])
+    got = tb.take(np.array([8, 8, 8]), now=0.0)
+    # burst capacity bounds the initial grab; unlimited class passes all
+    assert got.tolist() == [5, 8, 2]
+    got = tb.take(np.array([8, 8, 8]), now=1.0)       # 1 s of refill
+    assert got.tolist() == [5, 8, 1]
+    got = tb.take(np.array([8, 0, 8]), now=1.0)       # no time, no tokens
+    assert got.tolist() == [0, 0, 0]
+
+
+def test_admission_token_bucket_sheds_tail_rows():
+    cp, fns = _build_cp()
+    adm = cp.attach_qos(QosSpec(rate_limits=(None, None, 2.0),
+                                burst=(8.0, 8.0, 2.0)))
+    fn = fns["nodeinfo"]
+    invs = [Invocation(fn, 0.0, qos=QOS_BATCH, tenant=7)
+            for _ in range(6)] + [Invocation(fn, 0.0)]
+    accepted = cp.submit_batch(invs)
+    assert accepted == 3                  # 2 batch tokens + 1 standard
+    assert int(adm.token_shed[QOS_BATCH]) == 4
+    assert adm.shed_by_tenant == {7: 4}
+    assert cp.rejected_count == 4
+
+
+# ------------------------------------------------ overload + brownout ------
+
+def _columnar_burst(fn, qos, tenant=None):
+    n = len(qos)
+    return InvocationBatch([fn], np.zeros(n, np.int32), np.zeros(n),
+                           qos=np.asarray(qos, np.int8),
+                           tenant=tenant)
+
+
+def _flood(cp, fn, rows=600):
+    """Push the aggregate queue depth past any shed threshold."""
+    cp._admit_objects([Invocation(fn, 0.0) for _ in range(rows)])
+
+
+def test_overload_shed_drops_batch_then_standard():
+    cp, fns = _build_cp()
+    adm = cp.attach_qos(QosSpec(shed_queue_depth=50, shed_hard_factor=4.0))
+    fn = fns["nodeinfo"]
+    _flood(cp, fn, 100)                   # over soft, under hard (200)
+    b = _columnar_burst(fn, [0, 1, 2, 2])
+    accepted = cp.submit_batch(b)
+    assert accepted == 2                  # batch shed, lc + standard kept
+    assert int(adm.overload_shed[QOS_BATCH]) == 2
+    assert int(adm.overload_shed[QOS_STANDARD]) == 0
+    _flood(cp, fn, 200)                   # past hard threshold
+    b = _columnar_burst(fn, [0, 1, 2])
+    assert cp.submit_batch(b) == 1        # only latency_critical survives
+    assert int(adm.overload_shed[QOS_STANDARD]) == 1
+    assert int(adm.overload_shed[QOS_LATENCY_CRITICAL]) == 0
+
+
+def test_overload_degrade_demotes_standard_in_place():
+    cp, fns = _build_cp()
+    adm = cp.attach_qos(QosSpec(shed_queue_depth=50,
+                                overload_action="degrade"))
+    fn = fns["nodeinfo"]
+    _flood(cp, fn, 100)
+    b = _columnar_burst(fn, [1, 1, 0])
+    accepted = cp.submit_batch(b)
+    assert accepted == 3                  # nothing dropped
+    assert adm.degraded == 2
+    assert b.qos.tolist() == [QOS_BATCH, QOS_BATCH, QOS_LATENCY_CRITICAL]
+
+
+def test_overload_spillover_routes_to_least_loaded():
+    cp, fns = _build_cp(("cloud-cluster", "edge-cluster"))
+    adm = cp.attach_qos(QosSpec(shed_queue_depth=50,
+                                overload_action="spillover"))
+    fn = fns["nodeinfo"]
+    # pile all load on cloud-cluster so edge is the obvious spill target
+    for _ in range(4):
+        cp._admit_objects([Invocation(fn, 0.0) for _ in range(50)],
+                          platform_override="cloud-cluster")
+    edge_before = cp.platforms["edge-cluster"].queued_rows + \
+        cp.platforms["edge-cluster"].busy_replicas()
+    b = _columnar_burst(fn, [2] * 10 + [0])
+    accepted = cp.submit_batch(b)
+    assert accepted == 11                 # spilled rows still admitted
+    assert adm.spilled == 10
+    edge_after = cp.platforms["edge-cluster"].queued_rows + \
+        cp.platforms["edge-cluster"].busy_replicas()
+    assert edge_after >= edge_before + 10
+    assert cp.rejected_count == 0
+
+
+def test_brownout_sheds_batch_on_energy_cap():
+    cp, fns = _build_cp()
+    # idle power of cloud-cluster alone exceeds a 1 W cap: brownout is on
+    adm = cp.attach_qos(QosSpec(energy_cap_w=1.0))
+    fn = fns["nodeinfo"]
+    b = _columnar_burst(fn, [0, 1, 2, 2], tenant=[1, 1, 9, 9])
+    accepted = cp.submit_batch(b)
+    assert accepted == 2
+    assert int(adm.brownout_shed[QOS_BATCH]) == 2
+    assert adm.brownout_events == 1
+    assert adm.shed_by_tenant == {9: 2}
+    sec = adm.section()
+    assert sec["shed_total"] == 2
+    assert sec["shed_by_class"]["batch"] == 2
+    assert sec["brownout_events"] == 1
+
+
+def test_gate_objects_matches_gate_columns_counters():
+    """The object-path gate twin sheds the same rows for the same load."""
+    fn = None
+    results = {}
+    for mode in ("columns", "objects"):
+        cp, fns = _build_cp()
+        adm = cp.attach_qos(QosSpec(rate_limits=(None, 3.0, 1.0),
+                                    burst=(8.0, 3.0, 1.0)))
+        fn = fns["nodeinfo"]
+        qos = [0, 1, 1, 1, 1, 2, 2]
+        if mode == "columns":
+            cp.submit_batch(_columnar_burst(fn, qos))
+        else:
+            cp.submit_batch([Invocation(fn, 0.0, qos=c) for c in qos])
+        results[mode] = (adm.token_shed.tolist(), cp.rejected_count)
+    assert results["columns"] == results["objects"]
+
+
+# --------------------------------------------------- unified admission -----
+
+def test_admit_request_is_the_single_entry_point():
+    cp, fns = _build_cp()
+    fn = fns["nodeinfo"]
+    assert cp.admit(AdmissionRequest((Invocation(fn, 0.0),))) == 1
+    assert cp.admit(AdmissionRequest(
+        [Invocation(fn, 0.0), Invocation(fn, 0.0)])) == 2
+    b = _columnar_burst(fn, [1, 1, 1])
+    assert cp.admit(AdmissionRequest(b)) == 3
+    assert cp.admit(AdmissionRequest(())) == 0
+    # deprecated shims route through admit() and agree with it
+    assert cp.submit(Invocation(fn, 0.0)) is True
+    assert cp.submit_batch([Invocation(fn, 0.0)]) == 1
+
+
+def test_admit_gates_every_legacy_entry_point():
+    cp, fns = _build_cp()
+    cp.attach_qos(QosSpec(rate_limits=(None, None, 0.0),
+                          burst=(1.0, 1.0, 0.0)))
+    fn = fns["nodeinfo"]
+    assert cp.submit(Invocation(fn, 0.0, qos=QOS_BATCH)) is False
+    assert cp.submit_batch([Invocation(fn, 0.0, qos=QOS_BATCH)]) == 0
+    assert cp.submit_batch(_columnar_burst(fn, [2, 2])) == 0
+    assert cp.rejected_count == 4
+
+
+# ------------------------------------------------------- scenario API ------
+
+def test_scenario_run_tuple_compat():
+    from repro.inspector import registry
+    from repro.inspector.scenario import ScenarioRun, run_scenario_state
+    run = run_scenario_state(registry.get("smoke/tiny"))
+    assert isinstance(run, ScenarioRun)
+    report, cp, sink = run                 # legacy unpack
+    assert run[0] is report is run.report
+    assert run[1] is cp is run.control_plane
+    assert run[2] is sink is run.sink
+    assert len(run) == 3
+    assert run.telemetry is None and run.recorder is None
+
+
+def test_scenario_typed_subspecs_match_flat_fields():
+    from repro.inspector.scenario import (AutoscaleSpec, Scenario,
+                                          TracingSpec, Workload)
+    wl = (Workload("nodeinfo", arrival={"kind": "poisson", "rps": 5.0}),)
+    base = dict(name="t", platforms=("cloud-cluster",), workloads=wl,
+                duration_s=1.0)
+    flat = Scenario(trace=True, trace_sample=0.5,
+                    autoscale={"policy": "ttl", "tick_s": 2.0,
+                               "policy_kwargs": {"ttl_s": 30.0}}, **base)
+    typed = Scenario(tracing=TracingSpec(enabled=True, sample=0.5),
+                     autoscaling=AutoscaleSpec(
+                         policy="ttl", tick_s=2.0,
+                         policy_kwargs={"ttl_s": 30.0}), **base)
+    assert flat.to_dict() == typed.to_dict()
+    # QosSpec objects normalize to their dict form in the echo
+    q = Scenario(qos=QosSpec(weights=(4, 2, 1)), **base)
+    assert q.to_dict()["qos"] == QosSpec(weights=(4, 2, 1)).to_dict()
+    assert q.qos_spec() == QosSpec(weights=(4, 2, 1))
+    assert q.replace(duration_s=2.0).qos == q.qos
+
+
+def test_qos_uniform_spec_keeps_report_metrics_identical():
+    """A QoS spec with uniform weights and no shedding is a pure
+    observer: every metric section matches the qos-less run exactly
+    (the report only gains the qos section)."""
+    from repro.inspector import registry, run_scenario
+    sc = registry.get("smoke/tiny")
+    base = run_scenario(sc).to_dict()
+    spec = QosSpec(weights=(1, 1, 1), slo_multipliers=(1.0, 1.0, 1.0))
+    wq = run_scenario(sc.replace(qos=spec)).to_dict()
+    for section in ("totals", "per_platform", "per_function"):
+        assert base[section] == wq[section]
+    assert base["qos"] == {}
+    assert wq["qos"]["fairness"]["drr_enabled"] is False
+    assert wq["qos"]["admission"]["shed_total"] == 0
+
+
+def test_qos_spec_validation():
+    with pytest.raises(ValueError):
+        QosSpec(weights=(4, 2))
+    with pytest.raises(ValueError):
+        QosSpec(weights=(4, 0.5, 1))
+    with pytest.raises(ValueError):
+        QosSpec(overload_action="explode")
+    with pytest.raises(ValueError):
+        qos_id("gold")
+    with pytest.raises(ValueError):
+        qos_id(7)
+    assert qos_id("batch") == QOS_BATCH == qos_id(2)
+    rt = QosSpec.from_dict(QosSpec(weights=(9, 3, 1),
+                                   rate_limits=(None, 5.0, 1.0)).to_dict())
+    assert rt.weights == (9, 3, 1) and rt.rate_limits == (None, 5.0, 1.0)
+
+
+def test_qos_columns_flow_to_sink():
+    cp, fns = _build_cp()
+    sink = ColumnarResultSink().install(cp)
+    fn = fns["nodeinfo"]
+    cp.submit_batch(_columnar_burst(fn, [0, 2], tenant=[4, 5]))
+    cp.clock.run_until(30.0)
+    cols = sink.completion_columns()
+    assert sorted(cols["qos"].tolist()) == [0, 2]
+    assert sorted(cols["tenant"].tolist()) == [4, 5]
