@@ -33,7 +33,12 @@ paths on the five Table-3 platforms with the production
   * ``columnar_qos`` — the columnar arm with the QoS layer armed
     (three classes + tenants on every row, non-uniform DRR weights, the
     admission gate in the path): the QoS-overhead gate, pinned <= 15%
-    below the plain columnar rate.
+    below the plain columnar rate;
+  * ``columnar_provenance`` — the columnar arm with the decision
+    journal attached (repro.obs.provenance): every fused decision
+    records its kill bits, score columns, choice and runner-up margin;
+    the provenance-overhead gate, pinned <= 15% below the plain
+    columnar rate.
 
 No simulated time elapses while submitting, so all arms schedule against
 identical platform-state snapshots at t=0 and the measurement isolates
@@ -141,7 +146,12 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         # DRR queues + admission gate armed; no limits or thresholds,
         # so every row is still accepted and the arms stay comparable
         cp.attach_qos(QosSpec(weights=(4, 2, 1)))
-    if kind in ("columnar", "columnar_traced", "columnar_qos"):
+    elif kind == "columnar_provenance":
+        from repro.obs import DecisionJournal
+        cp.kb.log_decisions = False
+        cp.attach_provenance(DecisionJournal())
+    if kind in ("columnar", "columnar_traced", "columnar_qos",
+                "columnar_provenance"):
         stream = _make_stream(fns, n, qos=kind == "columnar_qos")
     else:
         invs = _make_invs(fns, n)
@@ -158,7 +168,8 @@ def _run_arm(kind: str, n: int) -> Tuple[float, int, int]:
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(invs[lo:lo + BATCH])
-    elif kind in ("columnar", "columnar_traced", "columnar_qos"):
+    elif kind in ("columnar", "columnar_traced", "columnar_qos",
+                  "columnar_provenance"):
         accepted = 0
         for lo in range(0, n, BATCH):
             accepted += cp.submit_batch(stream.view(lo,
@@ -255,7 +266,7 @@ def run_bench(smoke: bool = False,
     reps = 2 if smoke else 3                   # best-of: tame CI jitter
     for kind, kn in (("per_invocation", n), ("batched", n),
                      ("columnar", n), ("columnar_traced", n),
-                     ("columnar_qos", n),
+                     ("columnar_qos", n), ("columnar_provenance", n),
                      ("pr1_hedged", hedge_n), ("jit_hedged", hedge_n)):
         dt = float("inf")
         for _ in range(reps):
@@ -273,12 +284,15 @@ def run_bench(smoke: bool = False,
     columnar_speedup = rates["columnar"] / max(rates["batched"], 1e-9)
     traced_frac = rates["columnar_traced"] / max(rates["columnar"], 1e-9)
     qos_frac = rates["columnar_qos"] / max(rates["columnar"], 1e-9)
+    prov_frac = (rates["columnar_provenance"]
+                 / max(rates["columnar"], 1e-9))
     rows.append(Row("sched_throughput/speedups", 0.0,
                     f"batched_vs_per_invocation={speedup:.1f}x;"
                     f"jit_hedged_vs_pr1_hedged={hedged_speedup:.1f}x;"
                     f"columnar_vs_batched={columnar_speedup:.1f}x;"
                     f"traced_vs_columnar={traced_frac:.2f}x;"
                     f"qos_vs_columnar={qos_frac:.2f}x;"
+                    f"provenance_vs_columnar={prov_frac:.2f}x;"
                     f"batch={BATCH}"))
 
     target = 3.0 if smoke else 10.0
@@ -303,6 +317,14 @@ def run_bench(smoke: bool = False,
           f"QoS classes + DRR + admission gate should cost <= "
           f"{(1.0 - qos_target):.0%} of the columnar admission rate "
           f"(got {qos_frac:.2f}x)", failures)
+    # same smoke-jitter caveat as the QoS gate: the 15% provenance pin
+    # is enforced at full scale and absolutely via the pinned
+    # columnar_provenance decisions/s floor
+    prov_target = 0.70 if smoke else 0.85
+    check(prov_frac >= prov_target,
+          f"decision-journal recording should cost <= "
+          f"{(1.0 - prov_target):.0%} of the columnar admission rate "
+          f"(got {prov_frac:.2f}x)", failures)
     _check_backend_parity(failures)
 
     if results_out is not None:
@@ -315,8 +337,11 @@ def run_bench(smoke: bool = False,
                          "columnar_vs_batched":
                          round(columnar_speedup, 2),
                          "traced_vs_columnar": round(traced_frac, 3),
-                         "qos_vs_columnar": round(qos_frac, 3)},
+                         "qos_vs_columnar": round(qos_frac, 3),
+                         "provenance_vs_columnar": round(prov_frac, 3)},
             "tracing_overhead_pct": round((1.0 - traced_frac) * 100.0, 1),
+            "provenance_overhead_pct":
+            round((1.0 - prov_frac) * 100.0, 1),
             "planned_stages_per_s":
             round(_planned_stages_per_s(smoke), 1),
         })

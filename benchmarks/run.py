@@ -102,6 +102,73 @@ def trace_main(args) -> int:
     return 0
 
 
+def explain_main(args) -> int:
+    """``python benchmarks/run.py explain <scenario> [--out PATH]
+    [--journal PATH] [--whatif policy=NAME[,key=val...]]``: run a
+    registered scenario with the decision journal attached, check the
+    same-policy replay oracle, optionally re-score the journal under an
+    alternate policy config, and print/write the provenance summary."""
+    from repro.inspector import registry
+    from repro.inspector.scenario import run_scenario_state
+    from repro.obs import (WhatIfConfig, decision_provenance_section,
+                           replay, whatif_section)
+    usage = ("usage: explain <scenario> [--out PATH] [--journal PATH] "
+             "[--whatif policy=NAME[,key=val...]]")
+    out_path, journal_path, whatif = None, None, None
+    names = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--out":
+            i += 1
+            out_path = args[i]
+        elif args[i] == "--journal":
+            i += 1
+            journal_path = args[i]
+        elif args[i] == "--whatif":
+            i += 1
+            whatif = WhatIfConfig.parse(args[i])
+        else:
+            names.append(args[i])
+        i += 1
+    if len(names) != 1:
+        print(usage)
+        return 1
+    if names[0] not in registry.names():
+        print(f"unknown scenario {names[0]!r}; any registered scenario "
+              f"works, and these arms come pre-journaled:")
+        for name in registry.names():
+            if name.startswith("prov/"):
+                print(f"  {name}")
+        return 1
+    sc = registry.get(names[0]).replace(provenance=True)
+    report, cp, _sink = run_scenario_state(sc)
+    journal = cp.journal
+    payload = {"scenario": names[0],
+               "decision_provenance": report.decision_provenance}
+    if journal.n:
+        base = replay(journal)
+        oracle_ok = base.matches(journal)
+        payload["replay_oracle"] = bool(oracle_ok)
+        if not oracle_ok:
+            print("# REPLAY ORACLE FAILED: same-policy replay diverged "
+                  "from the journaled choices")
+        if whatif is not None:
+            alt = replay(journal, whatif)
+            payload["whatif"] = whatif_section(journal, base, alt)
+    else:
+        payload["replay_oracle"] = True
+    if journal_path is not None:
+        journal.save(journal_path)
+        print(f"# {journal.n} journal rows -> {journal_path}")
+    text = json.dumps(payload, indent=2, sort_keys=True)
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            f.write(text + "\n")
+        print(f"# explain report -> {out_path}")
+    print(text)
+    return 0 if payload["replay_oracle"] else 1
+
+
 def _summarize_json(path: str, kind: str):
     if not os.path.exists(path):
         print(f"# {kind}: {path} not found — run the generator first")
@@ -133,6 +200,8 @@ def main() -> int:
         return scenario_diff_main(sys.argv[2:])
     if len(sys.argv) > 1 and sys.argv[1] == "trace":
         return trace_main(sys.argv[2:])
+    if len(sys.argv) > 1 and sys.argv[1] == "explain":
+        return explain_main(sys.argv[2:])
     t0 = time.time()
     all_failures = []
     print("name,us_per_call,derived")

@@ -361,6 +361,14 @@ class FunctionPerformanceModel:
         self._frow: Dict[str, int] = {}      # function name -> row
         self._pcol: Dict[str, int] = {}      # platform name -> column
         self.version = 0                     # bumped on every state write
+        # single-slot gather memo: within one admission burst the fused
+        # jit step (estimator_columns) and the decision journal
+        # (predict_matrix) gather the same (fns, profs) block with no
+        # state write in between — keyed by object identity + version,
+        # the snapshot _fn_cache discipline
+        self._gather_cache = None
+        self._analytic_cache = None
+        self._power_cache = None
         # dict-of-estimators read surface, now backed by the arrays
         self.exec_ewma = _PairMap(self, "exec_ewma")
         self.exec_p90 = _PairMap(self, "exec_p90")
@@ -488,6 +496,11 @@ class FunctionPerformanceModel:
         """Raw (F, P) gathers of the estimator grid for the given function
         x platform block: exec EWMA value/count, response-P90 height/count
         (counts zeroed for never-observed pairs)."""
+        key = (self.version, tuple(id(f) for f in fns),
+               tuple(id(p) for p in profs))
+        hit = self._gather_cache
+        if hit is not None and hit[0] == key:
+            return hit[1]
         st = self._state
         rows = np.array([self._frow.get(fn.name, -1) for fn in fns],
                         dtype=np.intp)
@@ -503,17 +516,24 @@ class FunctionPerformanceModel:
         # their count (< 10) keeps them on the analytic branch anyway,
         # but scrub counts so the fused step can gate on rc >= 10 alone
         rc = np.where(rc >= 5, rc, 0)
+        self._gather_cache = (key, (ev, en, rh, rc))
         return ev, en, rh, rc
 
     def analytic_matrix(self, fns: Sequence[FunctionSpec],
                         profs: Sequence[PlatformProfile]) -> np.ndarray:
         """(F, P) analytic exec seconds — elementwise IEEE-identical to
         ``analytic_exec`` (same operand order, float64 throughout)."""
+        key = (tuple(id(f) for f in fns), tuple(id(p) for p in profs))
+        hit = self._analytic_cache
+        if hit is not None and hit[0] == key:
+            return hit[1]
         flops = np.array([fn.flops for fn in fns])
         rw = np.array([fn.read_bytes + fn.write_bytes for fn in fns])
         rfl = np.array([max(p.replica_flops, 1.0) for p in profs])
         nbw = np.array([max(p.net_bw, 1.0) for p in profs])
-        return flops[:, None] / rfl[None, :] + rw[:, None] / nbw[None, :]
+        out = flops[:, None] / rfl[None, :] + rw[:, None] / nbw[None, :]
+        self._analytic_cache = (key, out)
+        return out
 
     def predict_matrix(self, fns: Sequence[FunctionSpec],
                        profs: Sequence[PlatformProfile],
@@ -529,8 +549,14 @@ class FunctionPerformanceModel:
         if p90:
             out["p90_s"] = np.where(rc >= 10, rh, exec_s * 1.5)
         if energy:
-            nodes = np.array([float(p.nodes) for p in profs])
-            lw = np.array([p.loaded_w_per_node for p in profs])
+            pk = tuple(id(p) for p in profs)
+            hit = self._power_cache
+            if hit is not None and hit[0] == pk:
+                nodes, lw = hit[1]
+            else:
+                nodes = np.array([float(p.nodes) for p in profs])
+                lw = np.array([p.loaded_w_per_node for p in profs])
+                self._power_cache = (pk, (nodes, lw))
             out["energy_j"] = (exec_s * nodes[None, :]) * lw[None, :]
         return out
 

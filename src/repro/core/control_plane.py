@@ -98,6 +98,11 @@ class FDNControlPlane:
         # check per request
         self.qos = None
         self.admission = None
+        # decision journal (repro.obs.provenance); None until
+        # attach_provenance — the fused-decision sites guard on it with
+        # one ``is None`` check per burst, so provenance-off admission
+        # costs nothing per invocation
+        self.journal = None
         # retain_completions=False drops the per-invocation completed and
         # rejected lists (open-loop sinks own the samples; 10^6-invocation
         # scenarios must not retain a million Invocation objects here)
@@ -243,8 +248,23 @@ class FDNControlPlane:
             self._maybe_prewarm(inv.fn)
         if platform_override is not None:
             target = self.platforms.get(platform_override)
-        else:
+        elif self.journal is None:
             target = self.policy.choose(inv, self.alive_platforms())
+        else:
+            # journaled scalar path: same decision as ``choose`` (one
+            # fused fn_decisions over the same snapshot), plus one
+            # provenance row stamped onto the invocation
+            snap = as_snapshot(self.alive_platforms())
+            res = self.policy.fn_decisions([inv.fn], snap, n=1)
+            if res is None:                 # stateful: never journaled
+                target = self.policy.choose(inv, snap)
+            else:
+                idx, ok = res
+                rowids = self.journal.record(
+                    self.clock.now(), [inv.fn], snap, idx, ok,
+                    np.ones(1, np.int32))
+                inv.decision = int(rowids[0])
+                target = snap.platforms[int(idx[0])] if ok[0] else None
         rec = self.recorder
         if target is None:
             inv.status = "failed"
@@ -368,6 +388,14 @@ class FDNControlPlane:
                 fast = [(fn, idxs,
                          plats[int(idx[g])] if ok[g] else None)
                         for g, (fn, idxs) in enumerate(groups)]
+                if self.journal is not None:
+                    rowids = self.journal.record(
+                        now, [g[0] for g in groups], snap, idx, ok,
+                        np.array([len(g[1]) for g in groups], np.int32))
+                    for g, (_fn, idxs) in enumerate(groups):
+                        rid = int(rowids[g])
+                        for i in idxs:
+                            invs[i].decision = rid
 
         accepted = 0
         rec = self.recorder
@@ -541,6 +569,10 @@ class FDNControlPlane:
             plats = snap.platforms
             tmap = [plats[int(idx[g])] if ok[g] else None
                     for g in range(len(present))]
+            if self.journal is not None:
+                cnt = np.bincount(fidx, minlength=len(specs))
+                rowids = self.journal.record(now, pres_specs, snap,
+                                             idx, ok, cnt[present])
 
         accepted = 0
         rec = self.recorder
@@ -548,6 +580,8 @@ class FDNControlPlane:
         for g, j in enumerate(present):
             target = tmap[g]
             idxs = np.nonzero(fidx == j)[0]
+            if self.journal is not None and platform_override is None:
+                batch.decision[idxs] = rowids[g]
             if target is None:
                 batch.state[idxs] = InvocationBatch.REJECTED
                 self.rejected_count += int(idxs.size)
@@ -661,6 +695,20 @@ class FDNControlPlane:
 
             self.hedge.on_duplicate.append(_hedge_span)
         return recorder
+
+    def attach_provenance(self, journal):
+        """Attach a decision journal (repro.obs.provenance): every fused
+        ``fn_decisions`` admission records one provenance row per
+        distinct function — snapshot feature columns, filter-kill
+        bitmask, chosen/runner-up slots and margin — and stamps the row
+        id onto the routed invocations for the completion join.  Binds
+        the live policy's cascade + params and this plane's perf and
+        placement models; rows routed by overrides, spillover, hedging
+        or stateful rotation policies are never journaled (their
+        ``decision`` stays -1)."""
+        self.journal = journal.bind(self.policy, self.perf,
+                                    self.placement)
+        return journal
 
     def attach_telemetry(self, engine):
         """Attach a live telemetry engine (repro.obs.telemetry)

@@ -40,12 +40,12 @@ class InvocationBatch:
     PENDING, ADMITTED, REJECTED = 0, 1, 2
 
     __slots__ = ("specs", "fn_idx", "arrival_t", "payload_bytes",
-                 "deadline_s", "state", "qos", "tenant", "n",
+                 "deadline_s", "state", "qos", "tenant", "decision", "n",
                  "arrival_recorded", "_objs")
 
     def __init__(self, specs: Sequence[FunctionSpec], fn_idx, arrival_t,
                  payload_bytes=None, deadline_s=None, state=None,
-                 qos=None, tenant=None):
+                 qos=None, tenant=None, decision=None):
         self.specs: List[FunctionSpec] = \
             specs if isinstance(specs, list) else list(specs)
         self.fn_idx = np.asarray(fn_idx, np.int32)
@@ -68,6 +68,10 @@ class InvocationBatch:
             else np.asarray(qos, np.int8)
         self.tenant = np.zeros(n, np.int32) if tenant is None \
             else np.asarray(tenant, np.int32)
+        # decision-journal row id per arrival (-1 == not journaled); the
+        # control plane stamps it at admission when provenance is on
+        self.decision = np.full(n, -1, np.int64) if decision is None \
+            else np.asarray(decision, np.int64)
         # set once the control plane has folded this batch's arrivals into
         # the rate/interaction models (mirrors Invocation.arrival_recorded)
         self.arrival_recorded = False
@@ -87,7 +91,8 @@ class InvocationBatch:
                                self.deadline_s[lo:hi],
                                self.state[lo:hi],
                                qos=self.qos[lo:hi],
-                               tenant=self.tenant[lo:hi])
+                               tenant=self.tenant[lo:hi],
+                               decision=self.decision[lo:hi])
 
     # ------------------------------------------------- object round-trip --
     def materialize(self, i: int) -> Invocation:
@@ -99,6 +104,7 @@ class InvocationBatch:
                              float(self.arrival_t[i]),
                              qos=int(self.qos[i]),
                              tenant=int(self.tenant[i]))
+            inv.decision = int(self.decision[i])
             self._objs[i] = inv
         return inv
 
@@ -121,6 +127,7 @@ class InvocationBatch:
         arr = np.empty(n)
         qos = np.empty(n, np.int8)
         tenant = np.empty(n, np.int32)
+        decision = np.empty(n, np.int64)
         for i, inv in enumerate(invs):
             j = smap.get(id(inv.fn))
             if j is None:
@@ -131,8 +138,9 @@ class InvocationBatch:
             arr[i] = inv.arrival_t
             qos[i] = inv.qos
             tenant[i] = inv.tenant
+            decision[i] = inv.decision
         b = cls(specs, fidx, arr, payload_bytes=payload_bytes,
-                qos=qos, tenant=tenant)
+                qos=qos, tenant=tenant, decision=decision)
         b._objs = dict(enumerate(invs))
         return b
 

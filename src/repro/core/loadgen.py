@@ -192,6 +192,7 @@ class ColumnarResultSink:
         self._inv = np.empty(capacity, np.int64)
         self._qos = np.empty(capacity, np.int8)
         self._tenant = np.empty(capacity, np.int32)
+        self._decision = np.empty(capacity, np.int64)
         self._platform_ids: Dict[str, int] = {}
         self._fn_ids: Dict[str, int] = {}
         self._fn_specs: Dict[str, FunctionSpec] = {}
@@ -202,7 +203,7 @@ class ColumnarResultSink:
     def _grow(self, need: int):
         cap = max(self._arrival.size * 2, need)
         for name in ("_arrival", "_end", "_exec", "_platform", "_fn",
-                     "_cold", "_inv", "_qos", "_tenant"):
+                     "_cold", "_inv", "_qos", "_tenant", "_decision"):
             a = getattr(self, name)
             b = np.empty(cap, a.dtype)
             b[:self._n] = a[:self._n]
@@ -229,6 +230,7 @@ class ColumnarResultSink:
         self._inv[i] = inv.id
         self._qos[i] = inv.qos
         self._tenant[i] = inv.tenant
+        self._decision[i] = inv.decision
         self._n = i + 1
 
     @classmethod
@@ -252,6 +254,7 @@ class ColumnarResultSink:
         sink._inv[:n] = np.arange(n, dtype=np.int64)   # synthetic ids
         sink._qos[:n] = 1                              # standard class
         sink._tenant[:n] = 0
+        sink._decision[:n] = -1                        # not journaled
         sink._platform_ids = {name: i for i, name in enumerate(platforms)}
         sink._fn_ids = {f.name: i for i, f in enumerate(fns)}
         sink._fn_specs = {f.name: f for f in fns}
@@ -280,6 +283,7 @@ class ColumnarResultSink:
                 "fn": self._fn[:n], "cold": self._cold[:n],
                 "inv_id": self._inv[:n], "qos": self._qos[:n],
                 "tenant": self._tenant[:n],
+                "decision": self._decision[:n],
                 "platform_ids": dict(self._platform_ids),
                 "fn_ids": dict(self._fn_ids),
                 "fn_specs": dict(self._fn_specs)}

@@ -350,16 +350,36 @@ class AdmissionController:
         self._sig_over = burn >= self.spec.burn_threshold
         return self._sig_over
 
-    def _spill_target(self, cp) -> Optional[str]:
-        """Least-loaded alive platform (queued rows + busy replicas,
-        name as the deterministic tie-break)."""
+    def _spill_target(self, cp, fn_counts=()) -> Optional[str]:
+        """Spill destination respecting data gravity: platforms are
+        scored by the mean per-invocation transfer seconds the spilled
+        functions' data objects would cost from each candidate
+        (``DataPlacementManager.access_time`` — the same seconds-per-byte
+        accounting the chains planner uses) plus a normalized load term
+        (queued rows + busy replicas per total replica).  A platform
+        already holding the hot objects therefore beats a marginally
+        less-loaded one that would pull every byte over the WAN.
+
+        ``fn_counts`` is a sequence of ``(FunctionSpec, count)`` for the
+        rows being spilled; empty falls back to pure least-load (name as
+        the deterministic tie-break either way)."""
+        placement = getattr(cp, "placement", None)
+        total = sum(c for _fn, c in fn_counts)
         best = None
         for name, p in cp.platforms.items():
             if p.failed:
                 continue
-            load = p.queued_rows + p.busy_replicas()
-            if best is None or (load, name) < best:
-                best = (load, name)
+            load = (p.queued_rows + p.busy_replicas()) / \
+                max(p.prof.total_replicas, 1)
+            transfer = 0.0
+            if total and placement is not None:
+                for fn, c in fn_counts:
+                    for obj in fn.data_objects:
+                        transfer += c * placement.access_time(obj, name)
+                transfer /= total
+            score = transfer + load
+            if best is None or (score, name) < best:
+                best = (score, name)
         return None if best is None else best[1]
 
     def _fleet_power_w(self, cp) -> float:
@@ -460,8 +480,13 @@ class AdmissionController:
                 if hard:
                     low |= kept & (qcol == np.int8(QOS_STANDARD))
                 rows = np.nonzero(low)[0]
-                target = (self._spill_target(cp)
-                          if spec.overload_action == "spillover" else None)
+                target = None
+                if spec.overload_action == "spillover" and rows.size:
+                    counts = np.bincount(batch.fn_idx[rows],
+                                         minlength=len(batch.specs))
+                    fc = [(batch.specs[int(j)], int(counts[j]))
+                          for j in np.nonzero(counts)[0]]
+                    target = self._spill_target(cp, fc)
                 if rows.size and target is not None:
                     kept[rows] = False
                     keep = kept
@@ -503,7 +528,8 @@ class AdmissionController:
                           batch.deadline_s[kept_idx],
                           batch.state[kept_idx],
                           qos=batch.qos[kept_idx],
-                          tenant=batch.tenant[kept_idx])
+                          tenant=batch.tenant[kept_idx],
+                          decision=batch.decision[kept_idx])
         return sub, spill
 
     # ----------------------------------------------------- gate: objects --
@@ -552,9 +578,17 @@ class AdmissionController:
                     else {QOS_BATCH}
                 low = [inv for inv in kept if inv.qos in low_classes]
                 if low:
-                    target = (self._spill_target(cp)
-                              if spec.overload_action == "spillover"
-                              else None)
+                    target = None
+                    if spec.overload_action == "spillover":
+                        groups: Dict[int, List] = {}
+                        for inv in low:
+                            g = groups.get(id(inv.fn))
+                            if g is None:
+                                groups[id(inv.fn)] = [inv.fn, 1]
+                            else:
+                                g[1] += 1
+                        target = self._spill_target(
+                            cp, [(fn, c) for fn, c in groups.values()])
                     kept = [inv for inv in kept
                             if inv.qos not in low_classes]
                     if target is not None:

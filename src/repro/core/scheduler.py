@@ -324,8 +324,64 @@ class _SpecInv:
         self.fn = fn
 
 
+# Filter-kill bitmask bits recorded by the decision journal
+# (repro.obs.provenance).  Values mirror ``repro.kernels.policy_score``.
+KILL_DEAD = 1    # platform failed / no replicas (alive mask)
+KILL_UTIL = 2    # alive but dropped by the utilization filter
+KILL_SLO = 4     # survived utilization but dropped by SLO feasibility
+
+
+def _row(x: np.ndarray) -> np.ndarray:
+    """Broadcast a per-platform (P,) vector against (F, P) matrices; a
+    journal replay passes already-row-shaped (rows, P) matrices through
+    unchanged — broadcasting duplicates values, so the elementwise
+    arithmetic is bit-identical either way."""
+    return x if x.ndim == 2 else x[None, :]
+
+
+def decision_features(fns: Sequence[FunctionSpec], snap: PlatformSnapshot,
+                      perf: FunctionPerformanceModel,
+                      placement: Optional[DataPlacementManager]
+                      ) -> Dict[str, np.ndarray]:
+    """The full standard feature set every stateless policy cascade is a
+    pure function of — one (F, P) matrix or (P,)/(F,) vector per signal.
+    The decision journal snapshots exactly these columns so an offline
+    what-if replay can re-score them under *any* policy/params.
+
+    Base columns and predictions are fetched separately — the same
+    two-step shape as the fused jit path, so on the admission hot path
+    both the snapshot's base-view cache and the perf model's gather
+    memo hit and this costs stacks + three ``np.where`` passes."""
+    base = snap.fn_matrix(fns, None, placement)
+    pred = perf.predict_matrix(fns, snap.profs, p90=True, energy=True)
+    return {
+        "alive": base["alive"], "exec_s": pred["exec_s"],
+        "data_s": base["data_s"], "p90_s": pred["p90_s"],
+        "energy_j": pred["energy_j"], "warm_free": base["warm_free"],
+        "cpu_util": snap.cpu_util, "mem_util": snap.mem_util,
+        "cold_start_s": snap.cold_start_s,
+        "slo_s": _slo_vector(fns),
+    }
+
+
 class Policy:
     name = "base"
+
+    # Stateless policies expose ``cascade``: a pure staticmethod over the
+    # ``decision_features`` columns returning (cost (F, P) float64,
+    # kill (F, P) uint8 bitmask; kill == 0 marks feasible-after-degrade).
+    # It mirrors ``fn_cost_matrix`` op for op, so re-running it over
+    # journaled feature columns reproduces the original numpy-backend
+    # choices byte-identically (the what-if correctness oracle).
+    # Stateful rotation policies keep ``cascade = None``.
+    cascade = None
+    # Tunables ``cascade`` reads from its params dict, with defaults
+    # matching the policy constructor; ``cascade_params`` extracts the
+    # live instance's values.
+    CASCADE_PARAMS: Dict[str, float] = {}
+
+    def cascade_params(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in type(self).CASCADE_PARAMS}
 
     # ------------------------------------------------- vectorized core ---
     def fn_cost_matrix(self, fns: Sequence[FunctionSpec],
@@ -434,6 +490,12 @@ class PerformanceRankedPolicy(Policy):
         m = snap.fn_matrix(fns, self.perf)
         return ps.perf_ranked_decide(m["exec_s"], m["alive"])
 
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        kill = np.where(~alive, KILL_DEAD, 0).astype(np.uint8)
+        return feats["exec_s"], kill
+
 
 class UtilizationAwarePolicy(Policy):
     name = "utilization_aware"
@@ -459,6 +521,19 @@ class UtilizationAwarePolicy(Policy):
         m = snap.fn_matrix(fns, self.perf)
         return ps.utilization_decide(m["exec_s"], m["alive"],
                                      self._unloaded(snap))
+
+    CASCADE_PARAMS = {"cpu_threshold": 0.9, "mem_threshold": 0.9}
+
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        unloaded = _row((feats["cpu_util"] < params["cpu_threshold"]) &
+                        (feats["mem_util"] < params["mem_threshold"]))
+        ok = alive & unloaded
+        ok = np.where(ok.any(axis=1, keepdims=True), ok, alive)
+        kill = (np.where(~alive, KILL_DEAD, 0) |
+                np.where(alive & ~ok, KILL_UTIL, 0)).astype(np.uint8)
+        return feats["exec_s"], kill
 
 
 class RoundRobinCollaboration(Policy):
@@ -550,6 +625,12 @@ class DataLocalityPolicy(Policy):
         m = snap.fn_matrix(fns, self.perf, self.placement)
         return ps.locality_decide(m["exec_s"], m["data_s"], m["alive"])
 
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        kill = np.where(~alive, KILL_DEAD, 0).astype(np.uint8)
+        return feats["exec_s"] + feats["data_s"], kill
+
 
 class WarmAwarePolicy(Policy):
     """Cold-start-aware routing over the snapshot's warm-pool columns
@@ -577,6 +658,14 @@ class WarmAwarePolicy(Policy):
         return ps.warm_decide(m["exec_s"], m["data_s"], m["warm_free"],
                               snap.cold_start_s, m["alive"])
 
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        cold = np.where(feats["warm_free"] > 0.0, 0.0,
+                        _row(feats["cold_start_s"]))
+        kill = np.where(~alive, KILL_DEAD, 0).astype(np.uint8)
+        return feats["exec_s"] + feats["data_s"] + cold, kill
+
 
 def _slo_vector(fns: Sequence[FunctionSpec]) -> np.ndarray:
     return np.array([fn.slo.p90_response_s for fn in fns])
@@ -602,6 +691,16 @@ class EnergyAwarePolicy(Policy):
         m = snap.fn_matrix(fns, self.perf, p90=True, energy=True)
         return ps.energy_decide(m["energy_j"], m["p90_s"],
                                 _slo_vector(fns), m["alive"])
+
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        feasible = alive & (feats["p90_s"] <= feats["slo_s"][:, None])
+        feasible = np.where(feasible.any(axis=1, keepdims=True), feasible,
+                            alive)
+        kill = (np.where(~alive, KILL_DEAD, 0) |
+                np.where(alive & ~feasible, KILL_SLO, 0)).astype(np.uint8)
+        return feats["energy_j"], kill
 
 
 class SLOCompositePolicy(Policy):
@@ -660,6 +759,26 @@ class SLOCompositePolicy(Policy):
         if ps.use_pallas():
             return ps.fused_composite_decide_pallas(*args)
         return ps.fused_composite_decide(*args)
+
+    CASCADE_PARAMS = {"cpu_threshold": 0.9, "mem_threshold": 0.95,
+                      "energy_weight": 0.1}
+
+    @staticmethod
+    def cascade(feats, params):
+        alive = feats["alive"]
+        unloaded = _row((feats["cpu_util"] < params["cpu_threshold"]) &
+                        (feats["mem_util"] < params["mem_threshold"]))
+        ok = alive & unloaded
+        ok = np.where(ok.any(axis=1, keepdims=True), ok, alive)
+        feasible = ok & (feats["p90_s"] <= feats["slo_s"][:, None])
+        feasible = np.where(feasible.any(axis=1, keepdims=True), feasible,
+                            ok)
+        cost = (feats["exec_s"] + feats["data_s"]) + \
+            params["energy_weight"] * feats["energy_j"]
+        kill = (np.where(~alive, KILL_DEAD, 0) |
+                np.where(alive & ~ok, KILL_UTIL, 0) |
+                np.where(ok & ~feasible, KILL_SLO, 0)).astype(np.uint8)
+        return cost, kill
 
 
 POLICIES = {cls.name: cls for cls in

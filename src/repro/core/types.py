@@ -55,7 +55,7 @@ class Invocation:
                  "scheduled_t", "start_t", "end_t", "status", "cold_start",
                  "exec_time", "data_time", "queue_time", "hedged_from",
                  "attempts", "arrival_recorded", "qos", "tenant",
-                 "_on_done")
+                 "decision", "_on_done")
 
     def __init__(self, fn: FunctionSpec, arrival_t: float, vu: int = 0,
                  args: Any = None, qos: int = 1, tenant: int = 0):
@@ -79,6 +79,10 @@ class Invocation:
         self.queue_time = 0.0
         self.hedged_from: Optional[int] = None
         self.attempts = 0
+        # decision-journal row id that routed this invocation (-1 when
+        # provenance is off or the row bypassed the journaled fast path:
+        # overrides, spillover, hedges, stateful policies)
+        self.decision = -1
         # arrival recorded in the behavioral models exactly once, even if
         # the invocation is redelivered through submit() again
         self.arrival_recorded = False

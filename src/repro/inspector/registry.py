@@ -669,3 +669,21 @@ register("telemetry/burst-storm",
                                  "telemetry/burst-storm"))
 register("telemetry/smoke-quiet",
          lambda: _with_telemetry(smoke_tiny(), "telemetry/smoke-quiet"))
+
+# ---------------------------------------------------------------------------
+# Decision-provenance arms (repro.obs.provenance/whatif): the same
+# scenarios with the decision journal attached — the report gains a
+# ``decision_provenance`` section (perf-model calibration, filter kill
+# counts, regret, churn) and ``run.py explain <arm> [--whatif ...]``
+# renders kill-reason / counterfactual summaries over the journal.
+# ---------------------------------------------------------------------------
+
+register("prov/smoke-tiny",
+         lambda: smoke_tiny().replace(name="prov/smoke-tiny",
+                                      provenance=True))
+register("prov/etl-pipeline",
+         lambda: chain_etl().replace(name="prov/etl-pipeline",
+                                     provenance=True))
+register("prov/burst-storm-drr",
+         lambda: qos_burst_storm(True).replace(name="prov/burst-storm-drr",
+                                               provenance=True))

@@ -196,6 +196,12 @@ class Scenario:
     # multipliers, token-bucket rate limits, load-shedding / brownout
     # thresholds.  None leaves admission and queues exactly as before
     qos: Optional[Union[QosSpec, Dict[str, Any]]] = None
+    # decision provenance (repro.obs.provenance): journal every fused
+    # fn_decisions admission (feature snapshot, filter-kill bitmask,
+    # runner-up margin), stamp journal row ids onto invocations, and
+    # surface the calibration/regret analysis as the report's
+    # decision_provenance section.  Off by default (zero per-burst cost)
+    provenance: bool = False
     # typed-spec constructor aliases (normalized into the flat fields
     # above, so the serialized spec and goldens are identical either way)
     tracing: InitVar[Optional[TracingSpec]] = None
@@ -323,6 +329,9 @@ def assemble(sc: Scenario):
         # after telemetry: the admission controller's burn-rate overload
         # signal reads cp.telemetry rollups when configured
         cp.attach_qos(sc.qos_spec())
+    if sc.provenance:
+        from repro.obs.provenance import DecisionJournal
+        cp.attach_provenance(DecisionJournal())
     attach_completion_hooks(cp)
     gw = Gateway(cp)
     if sc.lb_policy is not None:
@@ -357,6 +366,10 @@ class ScenarioReport:
     # stats, DRR fairness shares and the admission controller's shed /
     # degrade / spillover / brownout counters (repro.core.qos)
     qos: Dict[str, Any] = field(default_factory=dict)
+    # provenance runs only: decision-journal calibration (predicted-vs-
+    # realized latency error), filter kill counts, regret and policy
+    # churn (repro.obs.provenance)
+    decision_provenance: Dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -426,6 +439,15 @@ class ScenarioReport:
             for k in ("per_class", "per_tenant", "fairness", "admission"):
                 if k not in q:
                     raise ValueError(f"qos missing {k!r}")
+        # decision_provenance is additive too ({} when the journal is off)
+        dp = d.get("decision_provenance", {})
+        if not isinstance(dp, dict):
+            raise ValueError("decision_provenance must be a dict")
+        if dp:
+            for k in ("policy", "decisions", "kill_counts", "calibration",
+                      "regret", "churn"):
+                if k not in dp:
+                    raise ValueError(f"decision_provenance missing {k!r}")
 
 
 def _pct_stats(rt: np.ndarray, duration_s: float) -> Dict[str, Any]:
@@ -453,7 +475,7 @@ class ScenarioRun:
     ``run_scenario_state(sc)[0]`` keep working unchanged."""
 
     __slots__ = ("report", "control_plane", "sink", "telemetry",
-                 "recorder")
+                 "recorder", "journal")
 
     def __init__(self, report: ScenarioReport, control_plane:
                  FDNControlPlane, sink: ColumnarResultSink):
@@ -462,6 +484,7 @@ class ScenarioRun:
         self.sink = sink
         self.telemetry = control_plane.telemetry
         self.recorder = control_plane.recorder
+        self.journal = control_plane.journal
 
     def _as_tuple(self):
         return (self.report, self.control_plane, self.sink)
@@ -694,6 +717,11 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
         qos_section = _qos_section(qspec, cp, cols, rt, slo_by_fid,
                                    sc.duration_s)
 
+    provenance: Dict[str, Any] = {}
+    if cp.journal is not None:
+        from repro.obs.provenance import decision_provenance_section
+        provenance = decision_provenance_section(cp.journal, cols)
+
     return ScenarioReport(schema_version=SCHEMA_VERSION,
                           scenario=sc.to_dict(), totals=totals,
                           per_platform=per_platform,
@@ -701,7 +729,8 @@ def build_report(sc: Scenario, cp: FDNControlPlane, fns,
                           per_chain=per_chain,
                           latency_breakdown=latency_breakdown,
                           alerts=alerts,
-                          qos=qos_section)
+                          qos=qos_section,
+                          decision_provenance=provenance)
 
 
 def _qos_section(spec: QosSpec, cp: FDNControlPlane,

@@ -41,6 +41,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 _INT = jnp.int32
 
+# Filter-kill bitmask bits for the explain bundle.  Values mirror
+# ``repro.core.scheduler.KILL_*`` (kernels must stay importable without
+# the core package, so the literals are repeated here).
+KILL_DEAD = 1    # platform failed / no replicas (alive mask)
+KILL_UTIL = 2    # alive but dropped by the utilization filter
+KILL_SLO = 4     # survived utilization but dropped by SLO feasibility
+
 _use_pallas = False
 
 
@@ -127,6 +134,52 @@ def composite_decide(exec_s, data_s, p90_s, energy_j, alive, unloaded,
     feasible = _degrade(ok & (p90_s <= slo_s[:, None]), ok)
     cost = (exec_s + data_s) + energy_weight * energy_j
     return _masked_argmin(cost, feasible)
+
+
+# ---------------------------------------------------------------------------
+# Explain bundle: decision + provenance in one fused pass
+# ---------------------------------------------------------------------------
+
+def _masked_argmin_explain(cost, mask):
+    """``_masked_argmin`` plus the provenance extras: the runner-up
+    (best feasible candidate excluding the winner, -1 when fewer than two
+    are feasible) and the runner-up margin (inf in that case)."""
+    masked = jnp.where(mask, cost, jnp.inf)
+    finite = jnp.isfinite(masked)
+    masked = jnp.where(finite, masked, jnp.inf)
+    choice = jnp.argmin(masked, axis=1).astype(_INT)
+    ok = finite.any(axis=1)
+    ncols = masked.shape[1]
+    col = jax.lax.broadcasted_iota(_INT, masked.shape, 1)
+    rest = jnp.where(col == choice[:, None], jnp.inf, masked)
+    runner = jnp.argmin(rest, axis=1).astype(_INT)
+    best2 = rest.min(axis=1)
+    chosen = jnp.take_along_axis(masked, choice[:, None], axis=1)[:, 0]
+    margin = jnp.where(jnp.isfinite(best2), best2 - chosen, jnp.inf)
+    runner = jnp.where(jnp.isfinite(best2), runner, -1)
+    return choice, ok, runner, margin
+
+
+@jax.jit
+def composite_explain(exec_s, data_s, p90_s, energy_j, alive, unloaded,
+                      slo_s, energy_weight):
+    """``composite_decide`` returning the full explain bundle:
+
+        (choice, ok, kill, runner, margin, cost)
+
+    ``kill`` is a uint8 (F, P) filter-kill bitmask (KILL_DEAD / KILL_UTIL
+    / KILL_SLO; 0 == feasible after graceful degrade), ``cost`` the
+    unmasked score columns, ``runner``/``margin`` the runner-up platform
+    and its cost gap.  Same cascade arithmetic as ``composite_decide`` —
+    the host ``SLOCompositePolicy.cascade`` is the f64 parity oracle."""
+    ok = _degrade(alive & unloaded[None, :], alive)
+    feasible = _degrade(ok & (p90_s <= slo_s[:, None]), ok)
+    cost = (exec_s + data_s) + energy_weight * energy_j
+    kill = (jnp.where(~alive, KILL_DEAD, 0)
+            | jnp.where(alive & ~ok, KILL_UTIL, 0)
+            | jnp.where(ok & ~feasible, KILL_SLO, 0)).astype(jnp.uint8)
+    choice, any_ok, runner, margin = _masked_argmin_explain(cost, feasible)
+    return choice, any_ok, kill, runner, margin, cost
 
 
 @jax.jit

@@ -16,6 +16,14 @@ runs: multi-resolution rollup tiers over the columnar metrics path,
 multi-window burn-rate SLO alerting and EWMA+MAD platform-health
 anomaly detection — same ``is None``-guard discipline, O(tiers) memory
 on streams of any length.
+
+``provenance`` / ``whatif`` answer *why this platform*: a columnar
+decision journal tapped at the fused ``fn_decisions`` fast path records
+per-candidate filter-kill bits, score columns, chosen slot and
+runner-up margin; the journal joins to sink completions for
+predicted-vs-realized calibration and decision regret, and replays
+offline under alternate policies — same-policy replay reproduces the
+original choices byte-identically.
 """
 from repro.obs.recorder import (ADMIT, CHAIN_STAGE, COLD_START, DATA, EXEC,
                                 HEDGE, INGRESS, KIND_NAMES, LIFECYCLE,
@@ -26,11 +34,15 @@ from repro.obs.analysis import (Decomposition, chain_critical_paths,
                                 decompose, latency_breakdown_section,
                                 reconcile, slo_attribution)
 from repro.obs.export import (alert_annotation_events, chrome_trace_events,
-                              write_chrome_trace)
+                              to_openmetrics, write_chrome_trace)
 from repro.obs.telemetry import (TelemetryConfig, TelemetryEngine, TierRing,
                                  SeriesRollup)
 from repro.obs.alerts import (AlertConfig, BurnRule, alerts_section,
                               evaluate_health, evaluate_slo_burn)
+from repro.obs.provenance import (DecisionJournal, decision_provenance_section,
+                                  load_journal)
+from repro.obs.whatif import (ReplayResult, WhatIfConfig, replay,
+                              replay_matches, whatif_section)
 
 __all__ = [
     "SpanBuffer", "FlightRecorder", "KIND_NAMES", "SEGMENT_NAMES",
@@ -43,4 +55,8 @@ __all__ = [
     "TelemetryConfig", "TelemetryEngine", "TierRing", "SeriesRollup",
     "AlertConfig", "BurnRule", "alerts_section", "evaluate_health",
     "evaluate_slo_burn",
+    "to_openmetrics",
+    "DecisionJournal", "decision_provenance_section", "load_journal",
+    "ReplayResult", "WhatIfConfig", "replay", "replay_matches",
+    "whatif_section",
 ]

@@ -316,6 +316,48 @@ def test_overload_spillover_routes_to_least_loaded():
     assert cp.rejected_count == 0
 
 
+def test_spillover_respects_data_gravity():
+    """The spill-target score is transfer seconds + normalized load, so
+    a platform already holding the spilled functions' hot objects beats
+    a less-loaded one that would pull every byte over a slow WAN — and
+    data-free functions still spill pure least-loaded."""
+    cp, fns = _build_cp(("cloud-cluster", "edge-cluster"))
+    adm = cp.attach_qos(QosSpec(shed_queue_depth=50,
+                                overload_action="spillover"))
+    # the sample objects are seeded on cloud-cluster; make the WAN link
+    # to edge slow enough that staging 2 MB per invocation dwarfs a
+    # real (multiple-rows) load gap
+    cp.placement.set_bandwidth("cloud-cluster", "edge-cluster", 2e5)
+    hot = fns["image-processing"]
+
+    def load(name):
+        p = cp.platforms[name]
+        return (p.queued_rows + p.busy_replicas()) / \
+            max(p.prof.total_replicas, 1)
+
+    # pile load on cloud-cluster past the shed threshold: it is now
+    # both overloaded and clearly the MORE loaded platform
+    cp._admit_objects([Invocation(fns["nodeinfo"], 0.0)
+                       for _ in range(70)],
+                      platform_override="cloud-cluster")
+    assert load("cloud-cluster") > load("edge-cluster") + 1.0
+    # ...yet gravity still pins the hot-data function's spill there,
+    # while the data-free function spills least-loaded as before
+    assert adm._spill_target(cp, [(hot, 1)]) == "cloud-cluster"
+    assert adm._spill_target(cp, [(fns["nodeinfo"], 1)]) == "edge-cluster"
+    # end to end: overloaded standard rows of the hot function land on
+    # the platform that holds their data
+    cloud_before = cp.platforms["cloud-cluster"].queued_rows + \
+        cp.platforms["cloud-cluster"].busy_replicas()
+    b = _columnar_burst(hot, [2] * 8)
+    assert cp.submit_batch(b) == 8
+    assert adm.spilled == 8
+    cloud_after = cp.platforms["cloud-cluster"].queued_rows + \
+        cp.platforms["cloud-cluster"].busy_replicas()
+    assert cloud_after >= cloud_before + 8
+    assert cp.rejected_count == 0
+
+
 def test_brownout_sheds_batch_on_energy_cap():
     cp, fns = _build_cp()
     # idle power of cloud-cluster alone exceeds a 1 W cap: brownout is on

@@ -337,3 +337,77 @@ def test_report_alerts_section_schema(outage_report):
         1 for e in a["slo"]["events"] if e["kind"] == "fire")
     assert a["health"]["fires"] == sum(
         1 for e in a["health"]["events"] if e["kind"] == "fire")
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics exposition (repro.obs.export.to_openmetrics)
+# ---------------------------------------------------------------------------
+
+def _parse_openmetrics(text):
+    """name{labels} -> float value for every sample line."""
+    assert text.endswith("# EOF\n")
+    samples = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        key, _, val = line.rpartition(" ")
+        samples[key] = float(val)
+    return samples
+
+
+def test_openmetrics_roundtrip_burst_storm():
+    """Every rollup the engine holds after ``telemetry/burst-storm``
+    survives the text exposition exactly: the parsed-back count / sum /
+    min / max / bad equal the engine's coarsest-tier aggregates
+    bit-for-bit (repr-formatted floats round-trip float64)."""
+    from repro.inspector.scenario import run_scenario_state
+    from repro.obs import to_openmetrics
+
+    core_types._inv_counter = itertools.count()
+    _report, cp, _sink = run_scenario_state(
+        registry.get("telemetry/burst-storm"))
+    engine = cp.telemetry
+    text = to_openmetrics(engine)
+    samples = _parse_openmetrics(text)
+    tier = len(engine.cfg.tiers_s) - 1
+    q_label = repr(float(engine.cfg.quantile))
+    checked = 0
+    for (platform, fn, metric), sr in engine.series.items():
+        ids, counts, sums, mins, maxs, bad, q = sr.series(tier)
+        if not len(ids):
+            continue
+        labels = f'platform="{platform}",fn="{fn}"'
+        name = f"fdn_{metric}"
+        assert samples[f"{name}_count{{{labels}}}"] == int(counts.sum())
+        assert samples[f"{name}_sum{{{labels}}}"] == float(sums.sum())
+        assert samples[f"{name}_min{{{labels}}}"] == float(mins.min())
+        assert samples[f"{name}_max{{{labels}}}"] == float(maxs.max())
+        assert samples[f"{name}_bad_total{{{labels}}}"] == int(bad.sum())
+        qv = samples[f'{name}{{{labels},quantile="{q_label}"}}']
+        assert qv == float(q[-1])
+        assert float(mins.min()) <= qv <= float(maxs.max())
+        checked += 1
+    assert checked > 0
+    assert samples["fdn_telemetry_samples_total"] == engine.folded
+    assert samples["fdn_telemetry_flushes_total"] == engine.flushes
+    assert samples["fdn_telemetry_series"] == len(engine.series)
+
+
+def test_openmetrics_escaping_and_sanitizing():
+    """Label values escape backslash / quote / newline per the spec and
+    metric names sanitize to [a-zA-Z0-9_:]."""
+    from repro.obs import to_openmetrics
+
+    engine = TelemetryEngine(TelemetryConfig(
+        metrics=("weird.metric-name",)))
+    engine.observe_many('p"1\\x', "f\nn", "weird.metric-name",
+                        np.array([0.5, 1.0]), np.array([1.0, 2.0]))
+    engine.finalize()
+    text = to_openmetrics(engine)
+    assert "fdn_weird_metric_name_count" in text
+    assert 'platform="p\\"1\\\\x"' in text
+    assert 'fn="f\\nn"' in text
+    samples = _parse_openmetrics(text)
+    assert samples[
+        'fdn_weird_metric_name_count{platform="p\\"1\\\\x",fn="f\\nn"}'
+    ] == 2
